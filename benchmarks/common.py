@@ -1,0 +1,64 @@
+"""Shared benchmark scaffolding: the paper-scale experiment setup.
+
+The paper's system: 10-billion-neuron brain model on 2,000 GPUs
+(Table II also runs 20B on 4,000).  We generate the population-level
+graph (DESIGN.md §9.3 — the paper's own implementation partitions at
+population granularity too; P[M,M] at M=1e10 is not materializable),
+run the *real* algorithms, and measure the paper's quantities.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import (
+    device_graph,
+    genetic_partition,
+    greedy_partition,
+    random_partition,
+)
+from repro.snn import generate_brain_model
+
+__all__ = ["PaperScale", "build_setup", "emit", "timed"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperScale:
+    n_devices: int = 2000
+    n_populations: int = 20_000
+    total_neurons: int = 10_000_000_000
+    n_groups: int | None = None  # GPU groups (None = Alg. 2 auto-sweep)
+    seed: int = 0
+
+
+def build_setup(scale: PaperScale):
+    """Generate the brain model and the three partitions the paper
+    compares (random / GA / Algorithm 1)."""
+    bm = generate_brain_model(
+        n_populations=scale.n_populations,
+        n_regions=90,
+        total_neurons=scale.total_neurons,
+        inter_degree=40.0,  # paper-like device-graph density (Fig. 4)
+        seed=scale.seed,
+    )
+    g = bm.graph
+    parts = {
+        "random": random_partition(g, scale.n_devices, seed=scale.seed, balanced=True),
+        "ga": genetic_partition(
+            g, scale.n_devices, pop_size=12, generations=8, seed=scale.seed
+        ),
+        "greedy": greedy_partition(g, scale.n_devices, itermax=6, seed=scale.seed),
+    }
+    return bm, parts
+
+
+def emit(name: str, value: float, derived: str = "") -> None:
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0

@@ -1,0 +1,53 @@
+"""Fig. 4: per-GPU logical connection counts — P2P vs two-level routing.
+
+Paper claims: the mean number of connections departing each GPU drops
+from 1,552 to 88 with the two-level scheme.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import connection_counts, device_graph, p2p_routing, two_level_routing
+from benchmarks.common import PaperScale, build_setup, emit
+
+
+def run(scale: PaperScale):
+    bm, parts = build_setup(scale)
+    t, wg = device_graph(bm.graph, parts["greedy"].assign, scale.n_devices)
+    p2p = p2p_routing(t, wg)
+    two = two_level_routing(t, wg, scale.n_groups, grouping="greedy")
+    return connection_counts(p2p), connection_counts(two)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=2000)
+    ap.add_argument("--populations", type=int, default=20_000)
+    ap.add_argument("--groups", type=int, default=0)
+    args = ap.parse_args(argv)
+    scale = PaperScale(
+        n_devices=args.devices, n_populations=args.populations,
+        n_groups=args.groups or None
+    )
+    c_p2p, c_two = run(scale)
+    emit("fig4/mean_connections_p2p", round(float(c_p2p.mean()), 1), "paper: 1552")
+    emit("fig4/mean_connections_two_level", round(float(c_two.mean()), 1), "paper: 88")
+    emit(
+        "fig4/reduction_factor",
+        round(float(c_p2p.mean() / max(c_two.mean(), 1e-9)), 1),
+        "paper: 17.6x",
+    )
+    emit("fig4/max_connections_p2p", int(c_p2p.max()), "")
+    emit("fig4/max_connections_two_level", int(c_two.max()), "")
+    # histogram (10 bins) for the figure
+    hist_p2p, edges = np.histogram(c_p2p, bins=10)
+    hist_two, edges2 = np.histogram(c_two, bins=10)
+    emit("fig4/hist_p2p", " ".join(map(str, hist_p2p.tolist())), "counts per bin")
+    emit("fig4/hist_two_level", " ".join(map(str, hist_two.tolist())), "")
+    return {"mean_p2p": float(c_p2p.mean()), "mean_two": float(c_two.mean())}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode) vs jnp reference.
+
+CPU interpret mode measures nothing about TPU speed — the number that
+matters here is the per-kernel VMEM working set and FLOP count (the
+roofline inputs), plus wall time of the jnp reference as a CPU sanity
+budget.  Real-hardware timing slots in by flipping interpret=False.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.spike_accum import spike_accum
+from benchmarks.common import emit
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true")
+    args = ap.parse_args(argv)
+    rng = np.random.default_rng(0)
+    s = 512 if args.small else 1024
+
+    # flash attention
+    q = jnp.asarray(rng.normal(size=(1, 4, s, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, s, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, s, 64)), jnp.float32)
+    t_ref = _time(lambda: R.attention_ref(q, k, v, causal=True))
+    flops = 4 * 1 * 4 * s * s * 64 / 2  # causal
+    emit("kernel/flash_attention_ref_us", round(t_ref * 1e6, 1), f"flops={flops:.2e}")
+    fa = flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(fa), np.asarray(R.attention_ref(q, k, v, causal=True)), rtol=5e-3, atol=5e-3
+    )
+    emit("kernel/flash_attention_vmem_kib", round((128 * 64 + 2 * 128 * 128 + 128 * 64 * 3) * 4 / 1024, 1), "Bq=Bk=128 tiles")
+
+    # decode attention
+    qd = jnp.asarray(rng.normal(size=(4, 8, 64)), jnp.float32)
+    kd = jnp.asarray(rng.normal(size=(4, 2, s, 64)), jnp.float32)
+    vd = jnp.asarray(rng.normal(size=(4, 2, s, 64)), jnp.float32)
+    t_ref = _time(lambda: R.decode_attention_ref(qd, kd, vd))
+    emit("kernel/decode_attention_ref_us", round(t_ref * 1e6, 1), "")
+    da = decode_attention(qd, kd, vd, block_k=256, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(da), np.asarray(R.decode_attention_ref(qd, kd, vd)), rtol=5e-3, atol=5e-3
+    )
+
+    # ssd
+    x = jnp.asarray(rng.normal(size=(1, s, 4, 32)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.9, 0.999, size=(1, s, 4)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1, s, 1, 16)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(1, s, 1, 16)), jnp.float32)
+    t_ref = _time(lambda: R.ssd_ref(x, a, b, c))
+    emit("kernel/ssd_ref_us", round(t_ref * 1e6, 1), "")
+    sd = ssd_scan(x, a, b, c, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(sd), np.asarray(R.ssd_ref(x, a, b, c)), rtol=5e-3, atol=5e-3)
+
+    # rglru
+    ar = jnp.asarray(rng.uniform(0.9, 0.999, size=(2, s, 128)), jnp.float32)
+    br = jnp.asarray(rng.normal(size=(2, s, 128)), jnp.float32)
+    t_ref = _time(lambda: R.rglru_ref(ar, br))
+    emit("kernel/rglru_ref_us", round(t_ref * 1e6, 1), "")
+    rg = rglru_scan(ar, br, chunk=128, block_d=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(rg), np.asarray(R.rglru_ref(ar, br)), rtol=5e-3, atol=5e-3)
+
+    # spike accumulation (the paper's hot-spot) at 1% firing
+    m, n = 2048, 1024
+    spk = (rng.random(m) < 0.01).astype(np.float32)
+    w = rng.normal(size=(m, n)).astype(np.float32)
+    t_ref = _time(lambda: R.spike_accum_ref(jnp.asarray(spk), jnp.asarray(w)))
+    emit("kernel/spike_accum_ref_us", round(t_ref * 1e6, 1), "1% firing")
+    sa = spike_accum(jnp.asarray(spk), jnp.asarray(w), block_i=256, block_j=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(sa), spk @ w, rtol=1e-4, atol=1e-4)
+    skip_frac = float(np.mean([(spk[i:i+256] == 0).all() for i in range(0, m, 256)]))
+    emit("kernel/spike_accum_block_skip_frac", round(skip_frac, 3), "MXU blocks skipped")
+    emit("kernel/all_kernels_match_ref", 1, "interpret-mode allclose")
+
+
+if __name__ == "__main__":
+    main()

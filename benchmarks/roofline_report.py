@@ -1,0 +1,101 @@
+"""Summarize the dry-run JSONL into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load(path: str, tag: str = "baseline") -> list[dict]:
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if r.get("tag", "baseline") != tag:
+                continue
+            seen[(r["arch"], r["shape"], r["mesh"])] = r  # newest wins
+    return list(seen.values())
+
+
+def table(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant "
+        "| useful | roofline | mem GiB |\n|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | skipped | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | | | | |"
+            )
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.3f} | {rf['memory_s']:.3f} "
+            f"| {rf['collective_s']:.3f} | {rf['dominant']} "
+            f"| {rf['useful_ratio']:.2f} | {rf['roofline_fraction']:.2%} "
+            f"| {r['memory'].get('total_per_device_gib', '?')} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="benchmarks/results/dryrun.jsonl")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load(args.path, args.tag)
+    if args.markdown:
+        print(table(rows))
+        return
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    err = [r for r in rows if r["status"] == "error"]
+    tag = args.tag
+    emit(f"dryrun[{tag}]/cells_ok", len(ok), "")
+    emit(f"dryrun[{tag}]/cells_skipped", len(skipped), "long_500k on full-attention archs")
+    emit(f"dryrun[{tag}]/cells_error", len(err), "")
+    if ok:
+        fits = sum(1 for r in ok if r["memory"].get("fits_16g"))
+        emit(f"dryrun[{tag}]/fits_16g", f"{fits}/{len(ok)}", "")
+        by_dom = {}
+        for r in ok:
+            by_dom[r["roofline"]["dominant"]] = by_dom.get(r["roofline"]["dominant"], 0) + 1
+        emit(f"dryrun[{tag}]/dominant_breakdown", str(by_dom), "")
+        best = max(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        worst = min(
+            (r for r in ok if r["shape"] == "train_4k"),
+            key=lambda r: r["roofline"]["roofline_fraction"],
+            default=best,
+        )
+        emit(
+            f"dryrun[{tag}]/best_cell",
+            f"{best['arch']}×{best['shape']}×{best['mesh']}",
+            f"{best['roofline']['roofline_fraction']:.2%}",
+        )
+        emit(
+            f"dryrun[{tag}]/worst_train_cell",
+            f"{worst['arch']}×{worst['shape']}×{worst['mesh']}",
+            f"{worst['roofline']['roofline_fraction']:.2%}",
+        )
+    for r in err:
+        emit(f"dryrun[{tag}]/error_cell", f"{r['arch']}×{r['shape']}×{r['mesh']}", r.get("error", "")[:120])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark driver: one experiment per paper table/figure + framework
+benches.  Prints ``name,value,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+``--full`` uses paper-scale sizes (2,000 devices / 20k populations);
+the default is a reduced but structure-preserving configuration so the
+suite completes in a few minutes on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--skip-exec", action="store_true", help="skip subprocess benches")
+    args = ap.parse_args(argv)
+
+    if args.full:
+        size = ["--devices", "2000", "--populations", "20000"]
+    else:
+        size = ["--devices", "500", "--populations", "6000"]
+
+    from benchmarks import (
+        fig3a_partition_traffic,
+        fig3b_routing_traffic,
+        fig4_connections,
+        table2_latency,
+        hierarchical_a2a,
+        kernel_bench,
+        roofline_report,
+    )
+
+    t0 = time.time()
+    print("name,value,derived")
+    fig3a_partition_traffic.main(size)
+    fig3b_routing_traffic.main(size)
+    fig4_connections.main(size)
+    table2_latency.main(size + (["--scale2"] if args.full else []))
+    hierarchical_a2a.main(["--skip-exec"] if args.skip_exec else [])
+    kernel_bench.main([] if args.full else ["--small"])
+    roofline_report.main([])
+    import os
+    if os.path.exists("benchmarks/results/dryrun_optimized.jsonl"):
+        roofline_report.main(
+            ["--path", "benchmarks/results/dryrun_optimized.jsonl", "--tag", "optimized"]
+        )
+    print(f"total_wall_s,{time.time()-t0:.1f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""MoE expert placement — Algorithm 1 as an LM-framework feature.
+
+    PYTHONPATH=src python examples/expert_placement.py
+
+Simulates router statistics for a 128-expert top-8 MoE (qwen3-moe's
+shape) with realistic co-activation structure (domain-clustered
+experts), then compares expected cross-shard dispatch traffic under
+random / contiguous / Algorithm-1 placement, and the cross-pod message
+count under flat vs two-level dispatch (Algorithm 2's bridge pattern).
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core.hierarchical import dispatch_bytes, dispatch_messages
+from repro.core.placement import (
+    contiguous_placement,
+    place_experts,
+    random_placement,
+)
+
+cfg = ARCHS["qwen3-moe-30b-a3b"]
+E, K, SHARDS = cfg.n_experts, cfg.top_k, 16
+rng = np.random.default_rng(0)
+
+print(f"=== {cfg.name}: {E} experts, top-{K}, {SHARDS} EP shards ===\n")
+
+# synthetic router stats: experts cluster into domains; tokens co-activate
+# within a domain (how real MoEs behave after specialization)
+domains = np.arange(E) % 8
+load = rng.lognormal(0.0, 0.4, E)
+coact = rng.random((E, E)) * 0.5
+coact += (domains[:, None] == domains[None, :]) * rng.random((E, E)) * 8.0
+coact = (coact + coact.T) / 2
+np.fill_diagonal(coact, 0)
+
+placements = {
+    "random": random_placement(E, SHARDS, load, coact),
+    "contiguous": contiguous_placement(E, SHARDS, load, coact),
+    "algorithm-1": place_experts(load, coact, SHARDS),
+}
+for name, pl in placements.items():
+    print(f"{name:12s}: expected cross-shard dispatch fraction = {pl.expected_cross:.3f}")
+best = placements["algorithm-1"].expected_cross
+base = placements["random"].expected_cross
+print(f"\nAlgorithm 1 cuts expected dispatch traffic {100*(1-best/base):.1f}% vs random\n")
+
+print("=== two-level dispatch across the pod boundary (2×16×16 mesh) ===")
+chunk = 2 * 321 * cfg.d_model  # bf16 capacity block per destination
+for two in (False, True):
+    tag = "two-level" if two else "flat     "
+    m = dispatch_messages(2, 256, two_level=two)
+    b = dispatch_bytes(2, 256, chunk, two_level=two)
+    print(f"{tag}: cross-pod msgs/exchange = {m['cross_pod']:7d}   "
+          f"cross-pod bytes = {b['cross_pod']:.2e}")
+red = dispatch_messages(2, 256, two_level=False)["cross_pod"] / dispatch_messages(2, 256, two_level=True)["cross_pod"]
+print(f"\nbridge aggregation: {red:.0f}× fewer cross-pod messages, equal bytes")
+print("(the paper's Fig. 4 claim — 1,552 → 88 connections — restated for TPU)")

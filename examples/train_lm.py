@@ -1,0 +1,117 @@
+"""End-to-end LM training driver: data pipeline → microbatched train
+step → fault-tolerant supervisor → checkpoints → eval generation.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300          # ~10M model
+    PYTHONPATH=src python examples/train_lm.py --model 100m --steps 300
+
+The 100m preset is the assignment's "~100M model for a few hundred
+steps" driver (hours on this CPU; minutes per step on one TPU chip);
+the default tiny preset exercises the identical code path in minutes.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.serve import ServeConfig, ServeEngine
+from repro.sharding.policies import ShardingPolicy
+from repro.train import (
+    AdamWConfig,
+    Supervisor,
+    SupervisorConfig,
+    TrainStepConfig,
+    init_opt_state,
+    make_train_step,
+)
+
+PRESETS = {
+    # ~10M params: CPU-friendly demo
+    "tiny": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+                 d_ff=1024, vocab_size=8192, seq=128, batch=8),
+    # ~115M params (GPT-2-small class): the assignment's e2e driver
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+                 d_ff=3072, vocab_size=32768, seq=256, batch=8),
+}
+
+
+def build_config(preset: dict) -> ArchConfig:
+    return ArchConfig(
+        name="demo-lm",
+        family="dense",
+        n_layers=preset["n_layers"],
+        d_model=preset["d_model"],
+        n_heads=preset["n_heads"],
+        n_kv_heads=preset["n_kv_heads"],
+        head_dim=preset["head_dim"],
+        d_ff=preset["d_ff"],
+        vocab_size=preset["vocab_size"],
+        layer_pattern=("full",) * preset["n_layers"],
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", choices=list(PRESETS), default="tiny")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--log-every", type=int, default=20)
+    args = ap.parse_args()
+
+    preset = PRESETS[args.model]
+    cfg = build_config(preset)
+    pol = ShardingPolicy()
+    print(f"model={args.model}: {cfg.param_count()/1e6:.1f}M params, "
+          f"seq={preset['seq']} batch={preset['batch']}")
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    data = SyntheticLM(cfg, DataConfig(seq_len=preset["seq"], global_batch=preset["batch"]))
+    step = jax.jit(
+        make_train_step(
+            cfg,
+            pol,
+            TrainStepConfig(
+                n_microbatches=args.microbatches,
+                adamw=AdamWConfig(peak_lr=6e-4, warmup_steps=20, total_steps=args.steps),
+            ),
+        )
+    )
+    sup = Supervisor(
+        step,
+        params,
+        opt,
+        lambda s: jax.tree.map(jnp.asarray, data(s)),
+        SupervisorConfig(ckpt_dir=args.ckpt_dir, ckpt_every=max(args.steps // 4, 10)),
+    )
+    t0 = time.time()
+    hist = sup.run(args.steps)
+    for h in hist:
+        if h.step % args.log_every == 0 or h.step == len(hist):
+            print(f"step {h.step:4d}  loss {h.loss:.4f}  {h.wall_time:.2f}s"
+                  + ("  [restarted]" if h.restarted else ""))
+    first = np.mean([h.loss for h in hist[:10]])
+    last = np.mean([h.loss for h in hist[-10:]])
+    print(f"\n{len(hist)} steps in {time.time()-t0:.0f}s — "
+          f"loss {first:.4f} → {last:.4f} ({first-last:+.4f})")
+
+    print("\n=== generate from the trained model ===")
+    eng = ServeEngine(cfg, sup.params, pol, ServeConfig(batch_slots=2, temperature=0.8))
+    outs = eng.generate([[1, 2, 3], [10, 20]], max_new_tokens=12)
+    for i, o in enumerate(outs):
+        print(f"sample {i}: {o}")
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro — 'A Low-latency Communication Design for Brain Simulations'
+(CS.DC 2022) as a production multi-pod JAX framework.  See README.md."""

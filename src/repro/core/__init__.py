@@ -1,0 +1,60 @@
+"""Paper core: partitioning (Alg. 1), two-level routing (Alg. 2), the
+analytic cluster latency model, hierarchical TPU collective schedules,
+and the MoE expert-placement adapter."""
+from repro.core.graph import CommGraph, build_graph, from_dense, symmetrize
+from repro.core.partition import (
+    PartitionResult,
+    cut_traffic,
+    genetic_partition,
+    greedy_partition,
+    imbalance,
+    per_part_egress,
+    random_partition,
+    simulated_annealing_partition,
+)
+from repro.core.routing import (
+    RoutingTable,
+    connection_counts,
+    device_graph,
+    level1_egress,
+    level2_egress,
+    p2p_routing,
+    two_level_routing,
+)
+from repro.core.latency import ClusterModel, LatencyBreakdown, step_latency, table2_row
+from repro.core.placement import (
+    ExpertPlacement,
+    contiguous_placement,
+    place_experts,
+    random_placement,
+)
+
+__all__ = [
+    "CommGraph",
+    "build_graph",
+    "from_dense",
+    "symmetrize",
+    "PartitionResult",
+    "cut_traffic",
+    "greedy_partition",
+    "random_partition",
+    "genetic_partition",
+    "simulated_annealing_partition",
+    "imbalance",
+    "per_part_egress",
+    "RoutingTable",
+    "two_level_routing",
+    "p2p_routing",
+    "device_graph",
+    "connection_counts",
+    "level1_egress",
+    "level2_egress",
+    "ClusterModel",
+    "LatencyBreakdown",
+    "step_latency",
+    "table2_row",
+    "ExpertPlacement",
+    "place_experts",
+    "random_placement",
+    "contiguous_placement",
+]

@@ -1,0 +1,152 @@
+"""Sparse weighted communication graphs.
+
+The paper's inputs are a connection-probability matrix ``P[M, M]`` and a
+per-vertex traffic weight ``W[M]``.  At brain scale (``M ~ 1e10``) a dense
+``P`` is not materializable, so — like the paper's own implementation, which
+partitions a population-level model generated from a structural scan — we
+carry the graph in CSR form over *populations* and define
+
+    edge_traffic(i, j) = P[i, j] * W[i] * W[j]
+
+which is exactly the quantity the paper's objective sums over cut edges.
+
+Everything downstream (Algorithm 1 partitioning, Algorithm 2 routing, the
+analytic latency model, and the distributed SNN engine's exchange schedule)
+consumes this structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+__all__ = [
+    "CommGraph",
+    "build_graph",
+    "from_dense",
+    "symmetrize",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommGraph:
+    """CSR communication graph with per-vertex weights.
+
+    Attributes:
+      indptr:  ``int64[M + 1]`` CSR row pointers.
+      indices: ``int64[nnz]`` CSR column indices.
+      probs:   ``float64[nnz]`` connection probabilities ``P[i, j]``.
+      weights: ``float64[M]`` per-vertex traffic weights ``W[i]``.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    probs: np.ndarray
+    weights: np.ndarray
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.weights.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    def neighbors(self, v: int) -> tuple[np.ndarray, np.ndarray]:
+        """Return (neighbor indices, connection probs) of vertex ``v``."""
+        lo, hi = self.indptr[v], self.indptr[v + 1]
+        return self.indices[lo:hi], self.probs[lo:hi]
+
+    def edge_traffic(self) -> np.ndarray:
+        """Per-edge traffic ``P[i, j] * W[i] * W[j]`` aligned with ``indices``."""
+        rows = np.repeat(
+            np.arange(self.num_vertices, dtype=np.int64), np.diff(self.indptr)
+        )
+        return self.probs * self.weights[rows] * self.weights[self.indices]
+
+    def rows(self) -> np.ndarray:
+        """CSR row index for every stored edge."""
+        return np.repeat(
+            np.arange(self.num_vertices, dtype=np.int64), np.diff(self.indptr)
+        )
+
+    def total_traffic(self) -> float:
+        return float(self.edge_traffic().sum())
+
+    def validate(self) -> None:
+        m = self.num_vertices
+        if self.indptr.shape != (m + 1,):
+            raise ValueError("indptr must have shape (M + 1,)")
+        if self.indptr[0] != 0 or self.indptr[-1] != self.num_edges:
+            raise ValueError("indptr must start at 0 and end at nnz")
+        if np.any(np.diff(self.indptr) < 0):
+            raise ValueError("indptr must be nondecreasing")
+        if self.num_edges and (
+            self.indices.min() < 0 or self.indices.max() >= m
+        ):
+            raise ValueError("edge indices out of range")
+        if np.any(self.probs < 0) or np.any(self.probs > 1):
+            raise ValueError("probs must lie in [0, 1]")
+        if np.any(self.weights < 0):
+            raise ValueError("weights must be nonnegative")
+
+
+def build_graph(
+    src: Iterable[int],
+    dst: Iterable[int],
+    probs: Iterable[float],
+    weights: np.ndarray,
+    *,
+    sym: bool = True,
+) -> CommGraph:
+    """Build a :class:`CommGraph` from COO edges.
+
+    Duplicate edges are merged by taking the max probability.  When ``sym``
+    the graph is symmetrized (traffic between neurons is bidirectional spike
+    flow; the paper's objective treats the pair once).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    probs = np.asarray(probs, dtype=np.float64)
+    weights = np.asarray(weights, dtype=np.float64)
+    m = weights.shape[0]
+    if sym:
+        src, dst, probs = (
+            np.concatenate([src, dst]),
+            np.concatenate([dst, src]),
+            np.concatenate([probs, probs]),
+        )
+    # Drop self-loops: a neuron talking to itself is free.
+    keep = src != dst
+    src, dst, probs = src[keep], dst[keep], probs[keep]
+    # Merge duplicates (max prob).
+    key = src * m + dst
+    order = np.argsort(key, kind="stable")
+    key, src, dst, probs = key[order], src[order], dst[order], probs[order]
+    uniq, start = np.unique(key, return_index=True)
+    merged_p = np.maximum.reduceat(probs, start) if key.size else probs
+    src = src[start]
+    dst = dst[start]
+    counts = np.bincount(src, minlength=m)
+    indptr = np.zeros(m + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    g = CommGraph(indptr=indptr, indices=dst, probs=merged_p, weights=weights)
+    g.validate()
+    return g
+
+
+def from_dense(p: np.ndarray, weights: np.ndarray) -> CommGraph:
+    """Build from a dense probability matrix ``P[M, M]`` (small M only)."""
+    p = np.asarray(p, dtype=np.float64)
+    m = p.shape[0]
+    if p.shape != (m, m):
+        raise ValueError("P must be square")
+    src, dst = np.nonzero(p)
+    return build_graph(src, dst, p[src, dst], weights, sym=False)
+
+
+def symmetrize(g: CommGraph) -> CommGraph:
+    """Return a symmetrized copy of ``g`` (max of the two directions)."""
+    rows = g.rows()
+    return build_graph(rows, g.indices, g.probs, g.weights, sym=True)

@@ -1,0 +1,421 @@
+"""Algorithm 1 — balance-constrained greedy partitioning (paper §IV-A).
+
+Assigns ``M`` weighted vertices (neurons / populations / experts) to ``N``
+devices so that
+
+  * the total cut traffic  ``Σ_{assign[i] != assign[j]} P[i,j]·W[i]·W[j]``
+    is minimized (low coupling / high cohesion), and
+  * the accumulated per-device weight stays balanced — a device only admits
+    another vertex while its load is below the running average
+    (``Σ w_i < avg ΣW/N`` in the paper's pseudocode).
+
+The implementation is a round-robin greedy growth (each under-loaded device
+greedily grabs the unassigned vertex with the highest affinity to the
+vertices it already owns) followed by ``itermax`` boundary-refinement sweeps
+that keep the best solution seen — the paper's ``while t <= T … update the
+best optimal solution`` loop.
+
+Baselines implemented for the paper's comparisons (Fig. 3, Table II):
+``random_partition`` (state-of-the-art simulators' random neuron→GPU
+mapping), ``genetic_partition`` and ``simulated_annealing_partition``
+(the meta-heuristics the paper evaluated and found insufficient).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.core.graph import CommGraph
+
+__all__ = [
+    "PartitionResult",
+    "cut_traffic",
+    "per_part_egress",
+    "part_loads",
+    "imbalance",
+    "greedy_partition",
+    "random_partition",
+    "genetic_partition",
+    "simulated_annealing_partition",
+    "refine_partition",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionResult:
+    """Outcome of a partitioning run.
+
+    Attributes:
+      assign:  ``int64[M]`` vertex → part mapping (the paper's ``PM`` table).
+      n_parts: number of parts ``N``.
+      cut:     total cut traffic (the paper's objective).
+      loads:   ``float64[N]`` per-part accumulated vertex weight.
+      history: objective value after each refinement sweep.
+      method:  provenance tag.
+    """
+
+    assign: np.ndarray
+    n_parts: int
+    cut: float
+    loads: np.ndarray
+    history: tuple[float, ...]
+    method: str
+
+    def validate(self, g: CommGraph) -> None:
+        if self.assign.shape != (g.num_vertices,):
+            raise ValueError("assign must map every vertex")
+        if self.assign.min() < 0 or self.assign.max() >= self.n_parts:
+            raise ValueError("assign out of range")
+
+
+# ---------------------------------------------------------------------------
+# Objectives
+# ---------------------------------------------------------------------------
+
+
+def cut_traffic(g: CommGraph, assign: np.ndarray) -> float:
+    """Total traffic across parts: ``Σ_{cut (i,j)} P[i,j]·W[i]·W[j]``.
+
+    The CSR graph is symmetric (both directions stored), so each undirected
+    cut pair is counted once after halving.
+    """
+    rows = g.rows()
+    et = g.edge_traffic()
+    cut_mask = assign[rows] != assign[g.indices]
+    return float(et[cut_mask].sum() / 2.0)
+
+
+def per_part_egress(g: CommGraph, assign: np.ndarray, n_parts: int) -> np.ndarray:
+    """Per-part egress traffic — what Fig. 3(a) plots per GPU.
+
+    ``egress[p] = Σ_{i: assign[i]=p, j: assign[j]!=p} P[i,j]·W[i]·W[j]``.
+    """
+    rows = g.rows()
+    et = g.edge_traffic()
+    cut_mask = assign[rows] != assign[g.indices]
+    return np.bincount(
+        assign[rows[cut_mask]], weights=et[cut_mask], minlength=n_parts
+    )
+
+
+def part_loads(g: CommGraph, assign: np.ndarray, n_parts: int) -> np.ndarray:
+    return np.bincount(assign, weights=g.weights, minlength=n_parts)
+
+
+def imbalance(g: CommGraph, assign: np.ndarray, n_parts: int) -> float:
+    """max load / mean load − 1 (0 = perfectly balanced)."""
+    loads = part_loads(g, assign, n_parts)
+    mean = loads.mean()
+    if mean == 0:
+        return 0.0
+    return float(loads.max() / mean - 1.0)
+
+
+def _result(
+    g: CommGraph,
+    assign: np.ndarray,
+    n_parts: int,
+    history: tuple[float, ...],
+    method: str,
+) -> PartitionResult:
+    res = PartitionResult(
+        assign=assign.astype(np.int64),
+        n_parts=n_parts,
+        cut=cut_traffic(g, assign),
+        loads=part_loads(g, assign, n_parts),
+        history=history,
+        method=method,
+    )
+    res.validate(g)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — greedy balance-constrained partitioning
+# ---------------------------------------------------------------------------
+
+
+def greedy_partition(
+    g: CommGraph,
+    n_parts: int,
+    *,
+    itermax: int = 8,
+    balance_slack: float = 0.05,
+    seed: int = 0,
+) -> PartitionResult:
+    """The paper's Algorithm 1.
+
+    Args:
+      g: communication graph (``P`` in CSR + ``W``).
+      n_parts: number of devices ``N``.
+      itermax: the paper's ``T`` — refinement sweeps after the greedy growth.
+      balance_slack: admissible relative overshoot of the average load.
+      seed: RNG seed for seeding the growth fronts.
+
+    Returns:
+      :class:`PartitionResult` with the neuron→GPU mapping ``PM``.
+    """
+    m, n = g.num_vertices, n_parts
+    if n <= 0:
+        raise ValueError("n_parts must be positive")
+    if n >= m:
+        # Degenerate: one vertex per part (extra parts stay empty).
+        assign = np.arange(m, dtype=np.int64) % n
+        return _result(g, assign, n, (), "greedy")
+    rng = np.random.default_rng(seed)
+    w = g.weights
+    target = w.sum() / n
+    cap = target * (1.0 + balance_slack)
+
+    assign = np.full(m, -1, dtype=np.int64)
+    load = np.zeros(n, dtype=np.float64)
+    # gain[v] is maintained *per currently-considered part* via per-part
+    # dictionaries: gain_maps[p][v] = Σ_{u ∈ p, u~v} P[v,u]·W[v]·W[u].
+    gain_maps: list[dict[int, float]] = [dict() for _ in range(n)]
+    heaps: list[list[tuple[float, int]]] = [[] for _ in range(n)]
+
+    def _absorb(v: int, p: int) -> None:
+        """Assign v to p and propagate affinity to unassigned neighbors."""
+        assign[v] = p
+        load[p] += w[v]
+        gain_maps[p].pop(v, None)
+        nbrs, probs = g.neighbors(v)
+        gm = gain_maps[p]
+        hp = heaps[p]
+        wv = w[v]
+        for u, pr in zip(nbrs.tolist(), probs.tolist()):
+            if assign[u] != -1:
+                continue
+            gain = gm.get(u, 0.0) + pr * wv * w[u]
+            gm[u] = gain
+            heapq.heappush(hp, (-gain, u))
+
+    # Seed each part with a heavy vertex, spread by shuffling the top-2N
+    # heaviest so that re-runs with different seeds explore different fronts.
+    heavy = np.argsort(-w)[: min(m, 2 * n)]
+    rng.shuffle(heavy)
+    for p, v in enumerate(heavy[:n]):
+        _absorb(int(v), p)
+
+    unassigned = m - n
+    order = np.arange(n)
+    while unassigned > 0:
+        # Fill most-underloaded parts first — the paper's balance check
+        # (only parts with load below the average admit new vertices).
+        order = np.argsort(load)
+        progressed = False
+        for p in order:
+            if load[p] >= cap:
+                continue
+            hp = heaps[p]
+            gm = gain_maps[p]
+            v = -1
+            while hp:
+                negg, cand = heapq.heappop(hp)
+                if assign[cand] != -1:
+                    gm.pop(cand, None)
+                    continue
+                if gm.get(cand, 0.0) != -negg:  # stale heap entry
+                    continue
+                v = cand
+                break
+            if v == -1:
+                # Empty frontier: start a new region at the heaviest
+                # unassigned vertex (keeps the sweep linear).
+                rem = np.nonzero(assign == -1)[0]
+                if rem.size == 0:
+                    break
+                v = int(rem[np.argmax(w[rem])])
+            _absorb(v, int(p))
+            unassigned -= 1
+            progressed = True
+            if unassigned == 0:
+                break
+        if not progressed:
+            # All parts at capacity but vertices remain — relax the cap.
+            cap *= 1.0 + balance_slack
+    history = [cut_traffic(g, assign)]
+
+    best = assign.copy()
+    best_cut = history[0]
+    for _ in range(itermax):
+        moved = _refine_sweep(g, assign, n, cap)
+        cur = cut_traffic(g, assign)
+        history.append(cur)
+        if cur < best_cut:
+            best_cut, best = cur, assign.copy()
+        if moved == 0:
+            break
+    return _result(g, best, n, tuple(history), "greedy")
+
+
+def _refine_sweep(
+    g: CommGraph, assign: np.ndarray, n_parts: int, cap: float
+) -> int:
+    """One FM-style boundary sweep: move vertices to their best part when it
+    reduces cut traffic and respects the balance cap.  Mutates ``assign``;
+    returns the number of moves applied."""
+    rows = g.rows()
+    et = g.edge_traffic()
+    load = np.bincount(assign, weights=g.weights, minlength=n_parts)
+    boundary_mask = assign[rows] != assign[g.indices]
+    boundary = np.unique(rows[boundary_mask])
+    moved = 0
+    for v in boundary.tolist():
+        nbrs, _ = g.neighbors(v)
+        lo, hi = g.indptr[v], g.indptr[v + 1]
+        etv = et[lo:hi]
+        cur = assign[v]
+        # Affinity of v to each neighbor part.
+        parts = assign[nbrs]
+        aff = {}
+        for p, t in zip(parts.tolist(), etv.tolist()):
+            aff[p] = aff.get(p, 0.0) + t
+        cur_aff = aff.get(cur, 0.0)
+        best_p, best_gain = cur, 0.0
+        for p, a in aff.items():
+            if p == cur:
+                continue
+            if load[p] + g.weights[v] > cap:
+                continue
+            gain = a - cur_aff
+            if gain > best_gain:
+                best_gain, best_p = gain, p
+        if best_p != cur:
+            load[cur] -= g.weights[v]
+            load[best_p] += g.weights[v]
+            assign[v] = best_p
+            moved += 1
+    return moved
+
+
+def refine_partition(
+    g: CommGraph,
+    result: PartitionResult,
+    *,
+    sweeps: int = 4,
+    balance_slack: float = 0.05,
+) -> PartitionResult:
+    """Run extra refinement sweeps on an existing partition."""
+    assign = result.assign.copy()
+    cap = g.weights.sum() / result.n_parts * (1.0 + balance_slack)
+    history = list(result.history)
+    for _ in range(sweeps):
+        if _refine_sweep(g, assign, result.n_parts, cap) == 0:
+            break
+        history.append(cut_traffic(g, assign))
+    return _result(g, assign, result.n_parts, tuple(history), result.method)
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+
+def random_partition(
+    g: CommGraph, n_parts: int, *, seed: int = 0, balanced: bool = False
+) -> PartitionResult:
+    """Random neuron→GPU mapping — the baseline used by state-of-the-art
+    simulators per the paper (§II).  ``balanced=True`` round-robins a random
+    permutation instead (equal counts, still traffic-oblivious)."""
+    rng = np.random.default_rng(seed)
+    m = g.num_vertices
+    if balanced:
+        perm = rng.permutation(m)
+        assign = np.empty(m, dtype=np.int64)
+        assign[perm] = np.arange(m) % n_parts
+    else:
+        assign = rng.integers(0, n_parts, size=m)
+    return _result(g, assign, n_parts, (), "random")
+
+
+def _fitness(
+    g: CommGraph, assign: np.ndarray, n_parts: int, lam: float
+) -> float:
+    return cut_traffic(g, assign) * (1.0 + lam * imbalance(g, assign, n_parts))
+
+
+def genetic_partition(
+    g: CommGraph,
+    n_parts: int,
+    *,
+    pop_size: int = 24,
+    generations: int = 40,
+    mutation_rate: float = 0.02,
+    lam: float = 2.0,
+    seed: int = 0,
+) -> PartitionResult:
+    """Genetic-algorithm baseline (paper §II / Fig. 3 'GA' lines).
+
+    Chromosome = assignment vector; fitness = cut·(1 + λ·imbalance);
+    tournament selection, uniform crossover, random-reset mutation.
+    The paper found this class of methods achieves partial balance but
+    little latency gain — our benchmarks reproduce that gap.
+    """
+    rng = np.random.default_rng(seed)
+    m = g.num_vertices
+    pop = [rng.integers(0, n_parts, size=m) for _ in range(pop_size)]
+    fits = np.array([_fitness(g, a, n_parts, lam) for a in pop])
+    history = [float(fits.min())]
+    for _ in range(generations):
+        new_pop = []
+        # Elitism: keep the two best.
+        elite = np.argsort(fits)[:2]
+        new_pop.extend(pop[i].copy() for i in elite)
+        while len(new_pop) < pop_size:
+            # Tournament selection.
+            a, b = rng.integers(0, pop_size, 2)
+            pa = pop[a] if fits[a] < fits[b] else pop[b]
+            c, d = rng.integers(0, pop_size, 2)
+            pb = pop[c] if fits[c] < fits[d] else pop[d]
+            mask = rng.random(m) < 0.5
+            child = np.where(mask, pa, pb)
+            mut = rng.random(m) < mutation_rate
+            child[mut] = rng.integers(0, n_parts, size=int(mut.sum()))
+            new_pop.append(child)
+        pop = new_pop
+        fits = np.array([_fitness(g, a, n_parts, lam) for a in pop])
+        history.append(float(fits.min()))
+    best = pop[int(np.argmin(fits))]
+    return _result(g, best, n_parts, tuple(history), "genetic")
+
+
+def simulated_annealing_partition(
+    g: CommGraph,
+    n_parts: int,
+    *,
+    steps: int = 4000,
+    t0: float = 1.0,
+    alpha: float = 0.999,
+    lam: float = 2.0,
+    seed: int = 0,
+) -> PartitionResult:
+    """Simulated-annealing baseline (paper §II).  Single-vertex reassignment
+    moves with Metropolis acceptance on the same penalized objective."""
+    rng = np.random.default_rng(seed)
+    m = g.num_vertices
+    assign = random_partition(g, n_parts, seed=seed, balanced=True).assign.copy()
+    cur = _fitness(g, assign, n_parts, lam)
+    best, best_fit = assign.copy(), cur
+    temp = t0 * max(cur, 1e-12)
+    history = [cur]
+    for step in range(steps):
+        v = int(rng.integers(0, m))
+        p_new = int(rng.integers(0, n_parts))
+        p_old = int(assign[v])
+        if p_new == p_old:
+            continue
+        assign[v] = p_new
+        cand = _fitness(g, assign, n_parts, lam)
+        if cand <= cur or rng.random() < np.exp(-(cand - cur) / max(temp, 1e-30)):
+            cur = cand
+            if cur < best_fit:
+                best_fit, best = cur, assign.copy()
+        else:
+            assign[v] = p_old
+        temp *= alpha
+        if step % 500 == 0:
+            history.append(cur)
+    return _result(g, best, n_parts, tuple(history), "annealing")

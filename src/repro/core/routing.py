@@ -1,0 +1,384 @@
+"""Algorithm 2 — the two-level routing method (paper §IV-B).
+
+Clusters the ``N`` devices into ``G`` groups by applying the same
+balance-constrained greedy strategy as Algorithm 1 to the device-level
+traffic graph (``PG[N,N]``, ``WG[N]``), then derives a routing table:
+
+  * **Level-1**: devices in the same group exchange data through direct
+    peer-to-peer connections.
+  * **Level-2**: a device sending to another group forwards through a
+    **bridge** device of its own group; the bridge aggregates every flow
+    of its group destined to the target group into one logical transfer.
+
+Outputs reproduce the paper's measured quantities:
+
+  * per-device connection counts (Fig. 4 — paper: mean 1,552 → 88),
+  * per-device level-2 egress traffic (Fig. 3(b)),
+  * the routing table consumed by the distributed SNN engine and by the
+    hierarchical collective schedules in :mod:`repro.core.hierarchical`.
+
+Bridge selection balances the aggregated inter-group traffic across the
+members of each group (multiple bridges per group pair are allowed only
+through distinct (src-group, dst-group) responsibilities), which is what
+re-balances the level-2 traffic in Fig. 3(b).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import CommGraph, build_graph
+from repro.core import partition as part_mod
+
+__all__ = [
+    "RoutingTable",
+    "device_graph",
+    "two_level_routing",
+    "p2p_routing",
+    "connection_counts",
+    "level2_egress",
+    "level1_egress",
+    "group_pair_traffic",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingTable:
+    """The paper's ``TB`` output of Algorithm 2.
+
+    Attributes:
+      group_of:      ``int64[N]`` device → group id.
+      n_groups:      number of groups ``G``.
+      bridge:        ``int64[G, G]`` — ``bridge[gs, gd]`` is the device in
+                     group ``gs`` responsible for forwarding the aggregated
+                     traffic from ``gs`` to group ``gd`` (diagonal = -1).
+      device_traffic: ``float64[N, N]`` dense device-to-device traffic used
+                     to derive the table (kept for benchmarks; N ≤ ~4k).
+      method:        provenance of the grouping ('greedy' | 'genetic' | ...).
+    """
+
+    group_of: np.ndarray
+    n_groups: int
+    bridge: np.ndarray
+    device_traffic: np.ndarray
+    method: str
+    share: np.ndarray | None = None  # [N, G] bridge load fractions
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.group_of.shape[0])
+
+    def members(self, g: int) -> np.ndarray:
+        return np.nonzero(self.group_of == g)[0]
+
+    def route(self, src: int, dst: int) -> list[int]:
+        """Logical path for a (src, dst) flow.
+
+        Same group → direct.  Cross group → src → bridge(src_grp, dst_grp)
+        → bridge(dst_grp, src_grp) → dst; consecutive duplicates collapse
+        (e.g. when src *is* the bridge).
+        """
+        gs, gd = int(self.group_of[src]), int(self.group_of[dst])
+        if gs == gd:
+            return [src, dst]
+        b_out = int(self.bridge[gs, gd])
+        b_in = int(self.bridge[gd, gs])
+        hops = [src, b_out, b_in, dst]
+        path = [hops[0]]
+        for h in hops[1:]:
+            if h != path[-1]:
+                path.append(h)
+        return path
+
+    def validate(self) -> None:
+        n = self.n_devices
+        if self.group_of.min() < 0 or self.group_of.max() >= self.n_groups:
+            raise ValueError("group_of out of range")
+        for gs in range(self.n_groups):
+            for gd in range(self.n_groups):
+                b = self.bridge[gs, gd]
+                if gs == gd:
+                    continue
+                if not (0 <= b < n) or self.group_of[b] != gs:
+                    raise ValueError(
+                        f"bridge[{gs},{gd}]={b} is not a member of group {gs}"
+                    )
+
+
+# ---------------------------------------------------------------------------
+# Device-level traffic graph (the PG / WG inputs of Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+def device_graph(
+    g: CommGraph, assign: np.ndarray, n_devices: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Aggregate the neuron graph into the device graph.
+
+    Returns ``(T, WG)`` where ``T[a, b]`` is the total traffic between
+    devices ``a`` and ``b`` (symmetric, zero diagonal) — the paper's
+    ``PG`` weighted by the data volumes — and ``WG[a]`` is the total
+    neuron weight on device ``a``.
+    """
+    rows = g.rows()
+    et = g.edge_traffic()
+    src_dev = assign[rows]
+    dst_dev = assign[g.indices]
+    off = src_dev * n_devices + dst_dev
+    flat = np.bincount(off, weights=et, minlength=n_devices * n_devices)
+    t = flat.reshape(n_devices, n_devices)
+    t = (t + t.T) / 2.0  # CSR stores both directions; keep symmetric once
+    np.fill_diagonal(t, 0.0)
+    wg = np.bincount(assign, weights=g.weights, minlength=n_devices)
+    return t, wg
+
+
+def _graph_from_traffic(t: np.ndarray, wg: np.ndarray) -> CommGraph:
+    """Wrap a dense device-traffic matrix as a CommGraph for Algorithm 1.
+
+    Algorithm 1 consumes ``P`` and ``W`` with edge traffic ``P·W_i·W_j``;
+    here the aggregate traffic ``T[a,b]`` is already the edge quantity, so
+    we encode ``P[a,b] = T[a,b] / (W_a·W_b)`` clipped to [0, 1] after
+    normalizing, preserving the *ordering* of affinities which is all the
+    greedy uses.
+    """
+    n = t.shape[0]
+    src, dst = np.nonzero(t)
+    vals = t[src, dst]
+    scale = vals.max() if vals.size else 1.0
+    w = np.where(wg > 0, wg, 1.0)
+    denom = w[src] * w[dst]
+    probs = np.clip(vals / np.maximum(denom, 1e-30), 0.0, None)
+    pscale = probs.max() if probs.size else 1.0
+    probs = probs / max(pscale, 1e-30)
+    del scale
+    return build_graph(src, dst, probs, w, sym=False)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2
+# ---------------------------------------------------------------------------
+
+
+def two_level_routing(
+    traffic: np.ndarray,
+    wg: np.ndarray,
+    n_groups: int | None = None,
+    *,
+    itermax: int = 8,
+    balance_slack: float = 0.05,
+    seed: int = 0,
+    grouping: str = "greedy",
+) -> RoutingTable:
+    """The paper's Algorithm 2.
+
+    Args:
+      traffic: ``float64[N, N]`` symmetric device-to-device traffic
+        (from :func:`device_graph`).
+      wg: ``float64[N]`` per-device aggregated neuron weight.
+      n_groups: number of groups ``G``.  ``None`` sweeps a candidate set
+        and keeps the G minimizing the peak level-2 (bridge) egress —
+        the paper's "update the best optimal solution" outer loop.
+      itermax: the paper's ``T``.
+      grouping: 'greedy' (Algorithm 2 proper) or 'genetic' /
+        'random' (the baselines of Fig. 3(b)).
+
+    Returns:
+      :class:`RoutingTable` (the paper's ``TB``).
+    """
+    n = traffic.shape[0]
+    if traffic.shape != (n, n):
+        raise ValueError("traffic must be square")
+    if n_groups is None:
+        best, best_peak = None, np.inf
+        for g in (n // 64, n // 32, n // 16, n // 8):
+            if g < 2:
+                continue
+            tb = two_level_routing(
+                traffic, wg, g, itermax=itermax,
+                balance_slack=balance_slack, seed=seed, grouping=grouping,
+            )
+            peak = float(level2_egress(tb).max())
+            if peak < best_peak:
+                best, best_peak = tb, peak
+        if best is None:
+            raise ValueError("too few devices for grouping")
+        return best
+    if n_groups <= 0 or n_groups > n:
+        raise ValueError("need 1 <= n_groups <= n_devices")
+    dg = _graph_from_traffic(traffic, wg)
+    if grouping == "greedy":
+        res = part_mod.greedy_partition(
+            dg, n_groups, itermax=itermax, balance_slack=balance_slack, seed=seed
+        )
+    elif grouping == "genetic":
+        res = part_mod.genetic_partition(dg, n_groups, seed=seed)
+    elif grouping == "random":
+        res = part_mod.random_partition(dg, n_groups, seed=seed, balanced=True)
+    else:
+        raise ValueError(f"unknown grouping {grouping!r}")
+    group_of = res.assign
+    bridge, share = _select_bridges(traffic, group_of, n_groups)
+    tb = RoutingTable(
+        group_of=group_of,
+        n_groups=n_groups,
+        bridge=bridge,
+        device_traffic=traffic,
+        method=grouping,
+        share=share,
+    )
+    tb.validate()
+    return tb
+
+
+def _select_bridges(
+    traffic: np.ndarray, group_of: np.ndarray, n_groups: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Assign bridge responsibilities for every ordered group pair.
+
+    Greedy LPT load balancing: group pairs are visited in decreasing
+    order of aggregated traffic and assigned to the least-loaded member;
+    a pair whose flow alone exceeds the group's balanced target is SPLIT
+    across multiple bridges ("Select GPUs to connect other groups" —
+    Alg. 2 line 8 is plural), which is what flattens the Fig. 3(b) peak.
+
+    Returns (primary_bridge [G, G], share [N, G]) where ``share[d, gd]``
+    is the fraction of group(d)'s traffic toward ``gd`` carried by d.
+    """
+    n = traffic.shape[0]
+    bridge = np.full((n_groups, n_groups), -1, dtype=np.int64)
+    share = np.zeros((n, n_groups))
+    dev_to_grp = np.zeros((n, n_groups))
+    for g in range(n_groups):
+        dev_to_grp[:, g] = traffic[:, group_of == g].sum(axis=1)
+    grp_pair = np.zeros((n_groups, n_groups))
+    for g in range(n_groups):
+        grp_pair[g] = dev_to_grp[group_of == g].sum(axis=0)
+    bridge_load = np.zeros(n)
+    for gs in range(n_groups):
+        members = np.nonzero(group_of == gs)[0]
+        flows = grp_pair[gs].copy()
+        flows[gs] = 0.0
+        total = flows.sum()
+        target = total / max(len(members), 1)
+        for gd in np.argsort(-flows):
+            f = flows[gd]
+            if gd == gs or f <= 0:
+                bridge[gs, gd] = members[0] if gd != gs else -1
+                continue
+            k = int(min(len(members), max(1, np.ceil(f / max(target, 1e-30)))))
+            key = bridge_load[members] - 1e-12 * dev_to_grp[members, gd]
+            picks = members[np.argsort(key)[:k]]
+            bridge[gs, gd] = picks[0]
+            for b in picks:
+                share[b, gd] += 1.0 / k
+                bridge_load[b] += f / k
+    return bridge, share
+
+
+def p2p_routing(traffic: np.ndarray, wg: np.ndarray) -> RoutingTable:
+    """Direct peer-to-peer baseline: every device is its own group."""
+    n = traffic.shape[0]
+    return RoutingTable(
+        group_of=np.arange(n, dtype=np.int64),
+        n_groups=n,
+        bridge=np.full((n, n), -1, dtype=np.int64),
+        device_traffic=traffic,
+        method="p2p",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Measured quantities (paper Figs. 3(b), 4)
+# ---------------------------------------------------------------------------
+
+
+def connection_counts(tb: RoutingTable, *, threshold: float = 0.0) -> np.ndarray:
+    """Number of logical connections departing each device (Fig. 4).
+
+    P2P: one connection per destination device with traffic > threshold.
+    Two-level: direct connections to same-group peers with traffic, plus —
+    for bridges only — one aggregated connection per remote group they
+    serve, plus one connection from each device to each distinct bridge it
+    must forward through.
+    """
+    t = tb.device_traffic
+    n = tb.n_devices
+    if tb.method == "p2p":
+        return (t > threshold).sum(axis=1).astype(np.int64)
+    same = tb.group_of[:, None] == tb.group_of[None, :]
+    counts = ((t > threshold) & same).sum(axis=1).astype(np.int64)
+    gpt = group_pair_traffic(tb)
+    for d in range(n):
+        gs = tb.group_of[d]
+        # Connections to bridges of the own group for every remote group
+        # this device actually sends to (deduplicated by bridge device).
+        remote_groups = np.unique(
+            tb.group_of[np.nonzero((t[d] > threshold) & ~same[d])[0]]
+        )
+        bridges_used = {
+            int(tb.bridge[gs, gd]) for gd in remote_groups if tb.bridge[gs, gd] != d
+        }
+        counts[d] += len(bridges_used)
+        # Aggregated inter-group connections this device serves as bridge.
+        if tb.share is not None:
+            counts[d] += int(
+                ((tb.share[d] > 0) & (gpt[gs] > threshold)).sum()
+            )
+        else:
+            served = np.nonzero(tb.bridge[gs] == d)[0]
+            counts[d] += sum(
+                1 for gd in served if gd != gs and gpt[gs, gd] > threshold
+            )
+    return counts
+
+
+def group_pair_traffic(tb: RoutingTable) -> np.ndarray:
+    """Aggregated traffic between group pairs ``[G, G]``."""
+    g = tb.n_groups
+    onehot = np.zeros((tb.n_devices, g))
+    onehot[np.arange(tb.n_devices), tb.group_of] = 1.0
+    out = onehot.T @ tb.device_traffic @ onehot
+    np.fill_diagonal(out, 0.0)
+    return out
+
+
+def level2_egress(tb: RoutingTable) -> np.ndarray:
+    """Per-device level-2 egress traffic (Fig. 3(b)).
+
+    For P2P this is *all* egress (every flow is 'level-2' in the sense of
+    leaving the device individually).  For two-level routing, a device's
+    level-2 egress is the aggregated inter-group traffic it carries as a
+    bridge; non-bridge devices hand their cross-group flows to a bridge
+    over level-1 links, so their level-2 egress is zero.
+    """
+    t = tb.device_traffic
+    n = tb.n_devices
+    if tb.method == "p2p":
+        return t.sum(axis=1)
+    gpt = group_pair_traffic(tb)
+    if tb.share is not None:
+        return (tb.share * gpt[tb.group_of]).sum(axis=1)
+    out = np.zeros(n)
+    for gs in range(tb.n_groups):
+        for gd in range(tb.n_groups):
+            if gs == gd:
+                continue
+            out[tb.bridge[gs, gd]] += gpt[gs, gd]
+    return out
+
+
+def level1_egress(tb: RoutingTable) -> np.ndarray:
+    """Per-device level-1 (intra-group + to-bridge) egress traffic."""
+    t = tb.device_traffic
+    n = tb.n_devices
+    same = tb.group_of[:, None] == tb.group_of[None, :]
+    out = (t * same).sum(axis=1)
+    if tb.method == "p2p":
+        return np.zeros(n)
+    # forwarding hop to the bridge for cross-group flows (unless self)
+    bridge_of = tb.bridge[tb.group_of[:, None], tb.group_of[None, :]]  # [N,N]
+    fwd_mask = ~same & (bridge_of != np.arange(n)[:, None])
+    out += (t * fwd_mask).sum(axis=1)
+    return out

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline (host-sharded, prefetched)."""
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+
+__all__ = ["DataConfig", "Prefetcher", "SyntheticLM"]

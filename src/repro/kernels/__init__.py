@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the framework's compute hot-spots, each with a
+pure-jnp oracle (ref.py) and a jit'd public wrapper (ops.py).
+
+Kernels: flash_attention (train/prefill), decode_attention (KV-cache
+decode), ssd_scan (Mamba-2), rglru_scan (RecurrentGemma), spike_accum
+(the paper's synaptic-integration hot-spot, block-sparsity-skipping)."""
+from repro.kernels.ops import (
+    KernelPolicy,
+    attention,
+    decode_attention,
+    rglru,
+    spike_currents,
+    ssd,
+)
+
+__all__ = [
+    "KernelPolicy",
+    "attention",
+    "decode_attention",
+    "ssd",
+    "rglru",
+    "spike_currents",
+]

@@ -1,0 +1,3 @@
+"""Launchers: production meshes, the multi-pod dry-run, and the
+train / serve / brain-simulation CLIs.  NOTE: import mesh/dryrun lazily
+— dryrun sets XLA_FLAGS before any jax initialization."""

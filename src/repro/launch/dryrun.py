@@ -1,0 +1,367 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell
+on the production mesh and extract memory/cost/roofline evidence.
+
+The two lines above run before ANY other import — jax locks the device
+count at first initialization.  Everything else (smoke tests, benches)
+sees the real single CPU device; only this entry point sees 512.
+
+Usage:
+  python -m repro.launch.dryrun --all                      # full sweep
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh multi
+  ... --fsdp-over-pod / --ep-over-pod / --microbatches N   # §Perf knobs
+
+Each cell appends a JSON record to --out (default
+benchmarks/results/dryrun.jsonl); completed (arch, shape, mesh, tag)
+cells are skipped on re-run, so the sweep is resumable.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.mesh import POD_SIZE, make_production_mesh
+from repro.models import lm
+from repro.roofline.analysis import V5E, model_flops, roofline
+from repro.roofline.hlo import analyze, top_collectives
+from repro.sharding.policies import make_policy
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainStepConfig, make_train_step
+
+# per-arch microbatch counts for train_4k (memory-driven; §Perf tunes)
+TRAIN_MICROBATCHES = {
+    "mixtral-8x22b": 8,
+    "yi-34b": 8,
+    "qwen2.5-14b": 8,
+    "qwen3-moe-30b-a3b": 8,
+    "recurrentgemma-9b": 8,
+    "phi4-mini-3.8b": 4,
+    "deepseek-7b": 4,
+    "llava-next-mistral-7b": 4,
+    "musicgen-large": 4,
+    "mamba2-1.3b": 4,
+}
+
+
+import contextlib
+
+
+def _use_mesh(mesh):
+    um = getattr(jax.sharding, 'use_mesh', None)
+    return um(mesh) if um else contextlib.nullcontext()
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, pol) -> dict:
+    """ShapeDtypeStruct stand-ins for the data inputs of one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_sh = pol.named("batch", None)
+    if shape.kind == "decode":
+        if cfg.modality == "audio":
+            return {"tokens": _sds((b, 1, cfg.n_codebooks), jnp.int32, tok_sh and pol.named("batch", None, None))}
+        return {"tokens": _sds((b, 1), jnp.int32, tok_sh)}
+    if cfg.modality == "audio":
+        sh = pol.named("batch", None, None)
+        return {
+            "tokens": _sds((b, s, cfg.n_codebooks), jnp.int32, sh),
+            "labels": _sds((b, s, cfg.n_codebooks), jnp.int32, sh),
+        }
+    if cfg.modality == "vlm":
+        st = s - cfg.vision_tokens
+        return {
+            "tokens": _sds((b, st), jnp.int32, tok_sh),
+            "labels": _sds((b, st), jnp.int32, tok_sh),
+            "vision_embed": _sds(
+                (b, cfg.vision_tokens, cfg.d_model),
+                jnp.float32,
+                pol.named("batch", None, None),
+            ),
+        }
+    out = {"tokens": _sds((b, s), jnp.int32, tok_sh)}
+    if shape.kind == "train":
+        out["labels"] = _sds((b, s), jnp.int32, tok_sh)
+    return out
+
+
+def _abstract(tree_defs, specs, pol):
+    return jax.tree.map(
+        lambda pd, sp: _sds(pd.shape, pd.dtype, pol.named_from_spec(sp)),
+        tree_defs,
+        specs,
+        is_leaf=lambda x: isinstance(x, lm.PDef),
+    )
+
+
+def abstract_state(cfg: ArchConfig, pol):
+    """(params, opt_state) as sharded ShapeDtypeStructs."""
+    defs = lm.param_defs(cfg)
+    specs = lm.param_specs(cfg, pol)
+    params = _abstract(defs, specs, pol)
+    f32 = jax.tree.map(
+        lambda pd, sp: _sds(pd.shape, jnp.float32, pol.named_from_spec(sp)),
+        defs, specs, is_leaf=lambda x: isinstance(x, lm.PDef),
+    )
+    opt = {
+        "m": f32,
+        "v": f32,
+        "master": f32,
+        "count": _sds((), jnp.int32, pol.named()),
+    }
+    return params, opt
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int, pol):
+    shapes = jax.eval_shape(lambda: lm.init_cache(cfg, batch, max_len, pol))
+    specs = lm.cache_specs(cfg, pol)
+    return jax.tree.map(
+        lambda sd, sp: _sds(sd.shape, sd.dtype, pol.named_from_spec(sp)), shapes, specs
+    )
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    fsdp_over_pod: bool = False,
+    ep_over_pod: bool = False,
+    microbatches: int | None = None,
+    attn_mode: str = "a2a",
+    decode_replicated_weights: bool = True,
+    tag: str = "baseline",
+    verbose: bool = True,
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "tag": tag,
+        "status": "ok",
+    }
+    if shape.kind == "decode" and shape.name == "long_500k" and not cfg.supports_long_context:
+        rec["status"] = "skipped"
+        rec["reason"] = "full-attention arch: unbounded KV at 500k (DESIGN.md §5)"
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.devices.size
+        pol = make_policy(
+            mesh, fsdp_over_pod=fsdp_over_pod, ep_over_pod=ep_over_pod,
+            attn_mode=attn_mode,
+        )
+        if shape.global_batch < pol.dp_size:
+            # e.g. long_500k (B=1): batch cannot shard over the dp axes —
+            # the cache/state shards over tp only; data parallelism idles
+            pol = dataclasses.replace(pol, batch_axes=())
+        params_sds, opt_sds = abstract_state(cfg, pol)
+        batch_sds = input_specs(cfg, shape, pol)
+        if shape.kind == "train":
+            n_mb = microbatches or TRAIN_MICROBATCHES.get(arch, 4)
+            # multi-pod doubles the dp width: the per-microbatch batch
+            # must still divide (pod × data) = 32 shards
+            if multi_pod:
+                n_mb = min(n_mb, shape.global_batch // 32)
+            ts = TrainStepConfig(n_microbatches=n_mb, adamw=AdamWConfig())
+            step = make_train_step(cfg, pol, ts)
+            rec["microbatches"] = n_mb
+            with _use_mesh(mesh):
+                # donate params+opt: the update aliases them in place (as the
+                # real trainer does) — halves reported per-device memory
+                out_sh = (
+                    None,
+                    jax.tree.map(lambda s: s.sharding, params_sds),
+                    jax.tree.map(lambda s: s.sharding, opt_sds),
+                    None,
+                )
+                lowered = jax.jit(
+                    step, donate_argnums=(0, 1), out_shardings=out_sh
+                ).lower(params_sds, opt_sds, batch_sds)
+            tokens = shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            fn = lambda p, b: lm.prefill(p, b, cfg, pol)
+            with _use_mesh(mesh):
+                lowered = jax.jit(fn).lower(params_sds, batch_sds)
+            tokens = shape.global_batch * shape.seq_len
+        else:  # decode
+            # §Perf C-1: FSDP at decode streams the whole model through
+            # the interconnect every token.  Replicate weights over the
+            # dp axes when the bf16 params fit beside the cache
+            # (mixtral-8x22b keeps FSDP: 141B / tp16 would need 17.6 GiB).
+            fits = cfg.param_count() * 2 / max(pol.tp_size, 1) < 8e9
+            if decode_replicated_weights and fits:
+                pol = dataclasses.replace(pol, fsdp_axes=())
+                rec["decode_weights"] = "replicated_over_dp"
+            else:
+                rec["decode_weights"] = "fsdp"
+            params_sds, opt_sds = abstract_state(cfg, pol)
+            cache_sds = abstract_cache(cfg, shape.global_batch, shape.seq_len, pol)
+            pos_sds = _sds((), jnp.int32, pol.named())
+            fn = lambda p, c, b, pos: lm.decode_step(p, c, b, pos, cfg, pol)
+            with _use_mesh(mesh):
+                # donate the KV cache: decode updates it in place
+                out_sh = (None, jax.tree.map(lambda s: s.sharding, cache_sds))
+                lowered = jax.jit(
+                    fn, donate_argnums=(1,), out_shardings=out_sh
+                ).lower(params_sds, cache_sds, batch_sds, pos_sds)
+            tokens = shape.global_batch
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+
+        # --- memory analysis (proves it fits) -------------------------
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                k: getattr(ma, k)
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(ma, k)
+            }
+            total = rec["memory"].get("argument_size_in_bytes", 0) + rec[
+                "memory"
+            ].get("temp_size_in_bytes", 0)
+            rec["memory"]["total_per_device_gib"] = round(total / 2**30, 3)
+            rec["memory"]["fits_16g"] = bool(total < 16e9)
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory"] = {"error": str(e)}
+
+        # --- cost analysis + HLO parse ---------------------------------
+        try:
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, list) else ca
+            rec["xla_cost"] = {
+                "flops_unrolled_once": ca.get("flops"),
+                "bytes_accessed_once": ca.get("bytes accessed"),
+            }
+        except Exception as e:
+            rec["xla_cost"] = {"error": str(e)}
+        hlo_text = compiled.as_text()
+        totals = analyze(hlo_text, n_devices=n_dev, pod_size=POD_SIZE)
+        rec["top_collectives"] = [
+            {k2: (round(v2) if isinstance(v2, float) else v2) for k2, v2 in r.items()}
+            for r in top_collectives(hlo_text, n_devices=n_dev, pod_size=POD_SIZE, k=10)
+        ]
+        mf = model_flops(
+            cfg.active_param_count(),
+            tokens,
+            shape.kind if shape.kind == "train" else "inference",
+        )
+        rep = roofline(totals, n_devices=n_dev, model_flops_global=mf, hw=V5E)
+        rec["hlo"] = {
+            "flops_per_chip": totals.flops,
+            "hbm_bytes_per_chip": totals.hbm_bytes,
+            "coll_operand_bytes": totals.coll_operand_bytes,
+            "coll_ring_bytes": totals.coll_ring_bytes,
+            "cross_pod_bytes": totals.cross_pod_bytes,
+            "coll_counts": totals.coll_counts,
+            "coll_bytes_by_kind": {
+                k: round(v) for k, v in totals.coll_bytes_by_kind.items()
+            },
+        }
+        rec["roofline"] = rep.as_dict()
+        rec["tokens_per_step"] = tokens
+        if verbose:
+            print(
+                f"[{arch} × {shape_name} × {mesh_name} × {tag}] "
+                f"compile {t_compile:.0f}s | "
+                f"terms c/m/x = {rep.compute_s*1e3:.1f}/{rep.memory_s*1e3:.1f}/"
+                f"{rep.collective_s*1e3:.1f} ms | dominant={rep.dominant} | "
+                f"roofline {rep.roofline_fraction:.2%} | "
+                f"mem {rec['memory'].get('total_per_device_gib', '?')} GiB",
+                flush=True,
+            )
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] FAILED: {rec['error']}", flush=True)
+    return rec
+
+
+def _done_keys(path: str) -> set:
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"], r.get("tag", "baseline")))
+                except json.JSONDecodeError:
+                    continue
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun.jsonl")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--fsdp-over-pod", action="store_true")
+    ap.add_argument("--ep-over-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--attn-mode", choices=["a2a", "gather"], default="a2a")
+    ap.add_argument("--fsdp-decode", action="store_true", help="keep FSDP at decode (baseline)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set() if args.force else _done_keys(args.out)
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                key = (arch, shape, mesh_name, args.tag)
+                if key in done:
+                    continue
+                rec = run_cell(
+                    arch,
+                    shape,
+                    mp,
+                    fsdp_over_pod=args.fsdp_over_pod,
+                    ep_over_pod=args.ep_over_pod,
+                    microbatches=args.microbatches,
+                    attn_mode=args.attn_mode,
+                    decode_replicated_weights=not args.fsdp_decode,
+                    tag=args.tag,
+                )
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_err += rec["status"] == "error"
+    print(f"dry-run sweep: {n_ok} ok, {n_skip} skipped, {n_err} errors", flush=True)
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

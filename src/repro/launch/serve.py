@@ -1,0 +1,42 @@
+"""Serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch deepseek-7b \
+        --prompts "1,2,3" "4,5" --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS
+from repro.models import lm
+from repro.serve import ServeConfig, ServeEngine
+from repro.sharding.policies import ShardingPolicy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--prompts", nargs="+", default=["1,2,3", "4,5,6,7"])
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch].reduced() if jax.device_count() == 1 else ARCHS[args.arch]
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(
+        cfg,
+        params,
+        ShardingPolicy(),
+        ServeConfig(batch_slots=args.batch_slots, temperature=args.temperature),
+    )
+    prompts = [[int(t) for t in p.split(",")] for p in args.prompts]
+    outs = eng.generate(prompts, max_new_tokens=args.max_new)
+    for p, o in zip(prompts, outs):
+        print(f"{p} -> {o}")
+
+
+if __name__ == "__main__":
+    main()

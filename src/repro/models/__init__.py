@@ -1,0 +1,33 @@
+"""Model zoo: composable LM family (dense GQA / MoE / SSD / RG-LRU
+hybrid / modality-stub backbones) assembled by repro.models.lm."""
+from repro.models.lm import (
+    abstract_params,
+    cache_specs,
+    decode_step,
+    embed_inputs,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    padded_vocab,
+    param_defs,
+    param_specs,
+    prefill,
+    segments,
+)
+
+__all__ = [
+    "abstract_params",
+    "cache_specs",
+    "decode_step",
+    "embed_inputs",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "padded_vocab",
+    "param_defs",
+    "param_specs",
+    "prefill",
+    "segments",
+]

@@ -1,0 +1,621 @@
+"""Model building blocks: norms, RoPE, blocked attention, SwiGLU/MoE
+MLPs, Mamba-2 SSD blocks, RG-LRU blocks — pure functions over param
+pytrees, parameterized by :class:`repro.configs.ArchConfig` and a
+:class:`repro.sharding.policies.ShardingPolicy`.
+
+Everything here is the XLA-native path consumed by the dry-run (real
+HLO FLOPs); the Pallas kernels mirror these ops for the hardware path
+(``repro.kernels``).  Matmuls run in bf16; softmax/normalizers/state in
+fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.policies import ShardingPolicy
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "blocked_attention",
+    "attention_block",
+    "attention_decode",
+    "swiglu_mlp",
+    "moe_block",
+    "mamba2_block",
+    "mamba2_decode",
+    "rglru_block",
+    "rglru_decode",
+    "causal_conv1d",
+    "conv1d_step",
+]
+
+_MASK = -1.0e30
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _bf(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: [..., S, H, hd]; positions: [S] (or scalar)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_chunk: int = 1024,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Online-softmax attention scanned over KV chunks (XLA path).
+
+    q: [B, Sq, Hq, hd]; k/v: [B, Skv, Hkv, hd].  Memory is bounded by one
+    [B, Sq, Hq, kv_chunk] score block regardless of Skv — the same tiling
+    the Pallas flash kernel uses, expressed as a lax.scan so the dry-run
+    compiles it on any mesh (q may be sequence-sharded).
+    """
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (hd**0.5)
+    kv_chunk = min(kv_chunk, skv)
+    while skv % kv_chunk:  # largest divisor of skv ≤ requested chunk
+        kv_chunk -= 1
+    nk = skv // kv_chunk
+    qg = q.reshape(b, sq, hkv, group, hd)
+    qf = qg.astype(jnp.float32) * sm_scale
+    q_pos = jnp.arange(sq)
+    kc = jnp.moveaxis(k.reshape(b, nk, kv_chunk, hkv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, kv_chunk, hkv, hd), 1, 0)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, j = inp
+        k_pos = j * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kb.astype(jnp.float32))
+        mask = jnp.ones((sq, kv_chunk), dtype=bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, _MASK)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = corr * acc + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, hkv, group, 1), _MASK, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, group, 1), jnp.float32)
+    a0 = jnp.zeros((b, sq, hkv, group, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, jnp.arange(nk)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l).reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def attention_block(
+    x: jax.Array,
+    p: dict[str, jax.Array],
+    cfg: ArchConfig,
+    mixer: str,
+    pol: ShardingPolicy,
+    *,
+    positions: jax.Array | None = None,
+    return_kv: bool = False,
+):
+    """GQA attention over a full sequence (train / prefill).
+
+    x: [B, S, D].  Sequence-shards q over ``tp`` (context-parallel);
+    K/V are replicated per layer (the all-gather the roofline counts).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    window = cfg.window if mixer == "swa" else (
+        cfg.local_window if mixer == "local" else None
+    )
+    if positions is None:
+        positions = jnp.arange(s)
+    xb = _bf(x)
+    a2a = pol.attn_mode == "a2a"
+
+    def _proj(w, heads):
+        y = jnp.einsum("bsd,dh->bsh", xb, _bf(w))
+        if a2a:
+            # natural output sharding (features over tp: no weight
+            # gather), then an activation all-to-all into sequence
+            # sharding — §Perf B-1: replaces the full [D, H·hd] weight
+            # gather the 'gather' mode provokes (16×+ fewer bytes)
+            y = pol.shard(y, "batch", None, "tp")
+            y = pol.shard(y, "batch", "tp", None)
+        return y.reshape(b, s, heads, hd)
+
+    q = _proj(p["wq"], hq)
+    k = _proj(p["wk"], hkv)
+    v = _proj(p["wv"], hkv)
+    if cfg.qkv_bias:
+        q = q + _bf(p["bq"]).reshape(hq, hd)
+        k = k + _bf(p["bk"]).reshape(hkv, hd)
+        v = v + _bf(p["bv"]).reshape(hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # context-parallel attention: q sequence over tp; kv replicated
+    q = pol.shard(q, "batch", "tp", None, None)
+    k = pol.shard(k, "batch", None, None, None)
+    v = pol.shard(v, "batch", None, None, None)
+    o = blocked_attention(q, k, v, causal=True, window=window)
+    o = pol.shard(o, "batch", "tp", None, None)
+    of = o.reshape(b, s, hq * hd)
+    if a2a:
+        # a2a back to feature sharding so the out-projection contracts
+        # against its resident tp shard of wo (partial-sum + psum)
+        of = pol.shard(of, "batch", None, "tp")
+    out = jnp.einsum("bsh,hd->bsd", _bf(of), _bf(p["wo"]))
+    out = pol.shard(out, "batch", None, None)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(
+    x: jax.Array,
+    p: dict[str, jax.Array],
+    cache: dict[str, jax.Array],
+    pos: jax.Array,
+    cfg: ArchConfig,
+    mixer: str,
+    pol: ShardingPolicy,
+):
+    """One-token attention against the cache.
+
+    x: [B, 1, D]; cache: {"k","v": [B, W, Hkv, hd], "slot_pos": i32[W]}.
+    Full attention: W = max context, slot = pos.  Windowed (swa/local):
+    W = window, ring-buffer slot = pos % W; ``slot_pos`` tracks which
+    absolute position each slot holds (-1 = empty) for masking.
+    """
+    b, _, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    w_len = cache["k"].shape[1]
+    windowed = mixer in ("swa", "local")
+    xb = _bf(x[:, 0])
+    q = jnp.einsum("bd,dh->bh", xb, _bf(p["wq"])).reshape(b, hq, hd)
+    k = jnp.einsum("bd,dh->bh", xb, _bf(p["wk"])).reshape(b, hkv, hd)
+    v = jnp.einsum("bd,dh->bh", xb, _bf(p["wv"])).reshape(b, hkv, hd)
+    if cfg.qkv_bias:
+        q = q + _bf(p["bq"]).reshape(hq, hd)
+        k = k + _bf(p["bk"]).reshape(hkv, hd)
+        v = v + _bf(p["bv"]).reshape(hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q[:, None], pos[None], cfg.rope_theta)[:, 0]
+    k = rope(k[:, None], pos[None], cfg.rope_theta)[:, 0]
+    slot = jnp.where(windowed, pos % w_len, pos).astype(jnp.int32)
+    # Cache layout: heads over tp when divisible (clean in-place DUS);
+    # otherwise the sequence dim is tp-sharded and the write is a masked
+    # select — a dynamic-update-slice into a sharded dim makes the SPMD
+    # partitioner replicate the whole cache (DESIGN.md §6).
+    heads_tp = pol.tp_size > 1 and hkv % pol.tp_size == 0
+    cache_roles = (
+        ("batch", None, "tp", None) if heads_tp else ("batch", "tp", None, None)
+    )
+    if heads_tp:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k[:, None].astype(cache["k"].dtype), (0, slot, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v[:, None].astype(cache["v"].dtype), (0, slot, 0, 0)
+        )
+    else:
+        hit = (jnp.arange(w_len) == slot)[None, :, None, None]
+        k_cache = jnp.where(hit, k[:, None].astype(cache["k"].dtype), cache["k"])
+        v_cache = jnp.where(hit, v[:, None].astype(cache["v"].dtype), cache["v"])
+    slot_pos = jnp.where(
+        jnp.arange(w_len) == slot, pos.astype(jnp.int32), cache["slot_pos"]
+    )
+    k_cache = pol.shard(k_cache, *cache_roles)
+    v_cache = pol.shard(v_cache, *cache_roles)
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, hd).astype(jnp.float32) / (hd**0.5)
+    s = jnp.einsum("bhgd,bwhd->bhgw", qg, k_cache.astype(jnp.float32))
+    valid = slot_pos >= 0
+    if windowed:
+        valid &= slot_pos > pos - (cfg.window or cfg.local_window or w_len)
+    s = jnp.where(valid[None, None, None, :], s, _MASK)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgw,bwhd->bhgd", pattn, v_cache.astype(jnp.float32))
+    o = o.reshape(b, 1, hq * hd)
+    out = jnp.einsum("bsh,hd->bsd", _bf(o), _bf(p["wo"]))
+    return out, {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_mlp(x: jax.Array, p: dict[str, jax.Array], pol: ShardingPolicy) -> jax.Array:
+    """SwiGLU: (silu(x·Wg) ⊙ x·Wi)·Wo, hidden sharded over tp."""
+    xb = _bf(x)
+    g = jnp.einsum("bsd,df->bsf", xb, _bf(p["wg"]))
+    h = jnp.einsum("bsd,df->bsf", xb, _bf(p["wi"]))
+    g = pol.shard(g, "batch", None, "tp")
+    h = pol.shard(h, "batch", None, "tp")
+    a = jax.nn.silu(g.astype(jnp.float32)).astype(COMPUTE_DTYPE) * h
+    out = jnp.einsum("bsf,fd->bsd", a, _bf(p["wo"]))
+    return pol.shard(out, "batch", None, None)
+
+
+
+def _topk_iterative(probs: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k as k rounds of argmax+mask.
+
+    ``jax.lax.top_k`` lowers to a sort that the SPMD partitioner handles
+    by ALL-GATHERING the operand across every mesh axis (measured: 2 ×
+    2.5e10 ring bytes/step crossing the pod boundary on qwen3-moe —
+    §Perf A-5).  Argmax partitions cleanly along batch dims; k ≤ 8
+    rounds of it are FLOP-trivial next to the experts."""
+    vals, idxs = [], []
+    cur = probs
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)
+        v = jnp.take_along_axis(cur, i[..., None], axis=-1)[..., 0]
+        vals.append(v)
+        idxs.append(i.astype(jnp.int32))
+        cur = cur - jax.nn.one_hot(i, probs.shape[-1], dtype=cur.dtype) * 1e9
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def moe_block(
+    x: jax.Array,
+    p: dict[str, jax.Array],
+    cfg: ArchConfig,
+    pol: ShardingPolicy,
+    *,
+    capacity_factor: float = 1.25,
+) -> jax.Array:
+    """Top-k MoE with capacity-based dispatch (Switch-style einsums).
+
+    Two sharding modes (DESIGN.md §4):
+      * EP  (n_experts % ep_size == 0, e.g. qwen3-moe): experts sharded
+        over the ep axes; dispatch/combine einsums cross dp→ep — the
+        all-to-all the paper's two-level schedule optimizes.
+      * TP  (few big experts, e.g. mixtral): every expert's hidden dim
+        sharded over tp; dispatch stays local to the dp shard.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    # Sequence-chunked dispatch: the dispatch/combine masks are
+    # [B, S, E, C] with C ∝ S·k/E — QUADRATIC in S (66 GiB/device on
+    # mixtral prefill_32k).  Chunking the sequence into ≤4k-token
+    # dispatch groups makes them linear in S; tokens compete for
+    # capacity within their chunk only (tighter balance, same math).
+    chunk = min(s, 4096)
+    if s > chunk and s % chunk == 0:
+        nc = s // chunk
+        xc = x.reshape(b * nc, chunk, d)
+        yc = moe_block(xc, p, cfg, pol, capacity_factor=capacity_factor)
+        return yc.reshape(b, s, d)
+    ep = e % max(pol.tp_size, 1) == 0 and pol.tp_size > 1
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    # pin router/gate tensors to batch sharding: without the constraint
+    # the partitioner all-gathers probs across (pod, data) around top_k
+    # (§Perf A-2 — measured 2×2.5e10 ring bytes per step)
+    logits = pol.shard(logits, "batch", None, None)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = _topk_iterative(probs, k)  # [B,S,k]
+    gate_w = pol.shard(gate_w, "batch", None, None)
+    gate_i = pol.shard(gate_i, "batch", None, None)
+    gate_w = gate_w / jnp.clip(gate_w.sum(-1, keepdims=True), 1e-9)
+    cap = int(s * k * capacity_factor / e) + 1
+    oh_e = jax.nn.one_hot(gate_i, e, dtype=COMPUTE_DTYPE)  # [B,S,k,E]
+    # position of each (token, slot) within its expert's capacity buffer,
+    # counted along the sequence (per batch row = dispatch group)
+    slot_order = jnp.cumsum(
+        oh_e.reshape(b, s * k, e).astype(jnp.float32), axis=1
+    ).reshape(b, s, k, e)
+    pos_in_e = jnp.einsum(
+        "bske,bske->bsk", slot_order - 1.0, oh_e.astype(jnp.float32)
+    )
+    keep = pos_in_e < cap
+    oh_c = (
+        jax.nn.one_hot(pos_in_e.astype(jnp.int32), cap, dtype=COMPUTE_DTYPE)
+        * keep[..., None]
+    )
+    # One-hot routing masks are piecewise-constant: stop_gradient keeps
+    # autodiff from materializing and all-reducing [B,S,E,C]-sized mask
+    # cotangents (§Perf A-7 — measured 4.2e10 ring bytes/step); router
+    # learning flows through gate_w, token grads through the einsums.
+    oh_e = jax.lax.stop_gradient(oh_e)
+    oh_c = jax.lax.stop_gradient(oh_c)
+    # dispatch/combine tensors [B,S,E,C]
+    dispatch = jnp.einsum("bske,bskc->bsec", oh_e, oh_c)
+    combine = jnp.einsum("bske,bskc,bsk->bsec", oh_e, oh_c, _bf(gate_w))
+    dispatch = pol.shard(
+        _bf(dispatch), "batch_minus_ep" if ep else "batch", None,
+        "ep" if ep else None, None,
+    )
+    xe = jnp.einsum("bsec,bsd->ebcd", dispatch, _bf(x))  # [E,B,C,D]
+    if ep:
+        xe = pol.shard(xe, "ep", "batch_minus_ep", None, None)
+        h = jnp.einsum("ebcd,edf->ebcf", xe, _bf(p["w_in"]))
+        g = jnp.einsum("ebcd,edf->ebcf", xe, _bf(p["w_gate"]))
+        a = jax.nn.silu(g.astype(jnp.float32)).astype(COMPUTE_DTYPE) * h
+        ye = jnp.einsum("ebcf,efd->ebcd", a, _bf(p["w_out"]))
+        ye = pol.shard(ye, "ep", "batch_minus_ep", None, None)
+    else:
+        h = jnp.einsum("ebcd,edf->ebcf", xe, _bf(p["w_in"]))
+        g = jnp.einsum("ebcd,edf->ebcf", xe, _bf(p["w_gate"]))
+        h = pol.shard(h, None, "batch", None, "tp")
+        g = pol.shard(g, None, "batch", None, "tp")
+        a = jax.nn.silu(g.astype(jnp.float32)).astype(COMPUTE_DTYPE) * h
+        ye = jnp.einsum("ebcf,efd->ebcd", a, _bf(p["w_out"]))
+    out = jnp.einsum("bsec,ebcd->bsd", _bf(combine), ye)
+    return pol.shard(out, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (mamba2 / rglru branches)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # K is 4 — unrolled taps keep HLO tiny
+        out = out + pad[:, i : i + x.shape[1], :].astype(jnp.float32) * w[
+            i
+        ].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def conv1d_step(
+    x_t: jax.Array, conv_state: jax.Array, w: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """One decode step.  x_t: [B, C]; conv_state: [B, K-1, C] (history)."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    return y.astype(x_t.dtype), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+
+def _ssm_gates(dt_raw: jax.Array, p: dict[str, jax.Array]):
+    """Δ = softplus(dt + bias); a = exp(−Δ·exp(A_log)).  dt_raw: [...,H]."""
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-delta * jnp.exp(p["A_log"].astype(jnp.float32)))
+    return delta, a
+
+
+def mamba2_block(
+    x: jax.Array,
+    p: dict[str, jax.Array],
+    cfg: ArchConfig,
+    pol: ShardingPolicy,
+    *,
+    ssd_chunk: int = 128,
+    return_state: bool = False,
+):
+    """Mamba-2 mixer (train / prefill).  x: [B, S, D]."""
+    from repro.kernels.ops import _ssd_chunked_jnp
+
+    b, s, d = x.shape
+    di, nh, hp = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    xb = _bf(x)
+    z = jnp.einsum("bsd,de->bse", xb, _bf(p["wz"]))  # [B,S,di]
+    xr = jnp.einsum("bsd,de->bse", xb, _bf(p["wx"]))
+    bc = jnp.einsum("bsd,de->bse", xb, _bf(p["wb"]))  # [B,S,G*N]
+    cc = jnp.einsum("bsd,de->bse", xb, _bf(p["wc"]))
+    dt = jnp.einsum("bsd,dh->bsh", xb, _bf(p["wdt"]))  # [B,S,H]
+    xr = pol.shard(xr, "batch", None, "tp")
+    z = pol.shard(z, "batch", None, "tp")
+    xr = causal_conv1d(xr, p["conv_x"])
+    bc = causal_conv1d(bc, p["conv_b"])
+    cc = causal_conv1d(cc, p["conv_c"])
+    xr = jax.nn.silu(xr.astype(jnp.float32))
+    bc = jax.nn.silu(bc.astype(jnp.float32))
+    cc = jax.nn.silu(cc.astype(jnp.float32))
+    delta, a = _ssm_gates(dt, p)  # [B,S,H]
+    xh = xr.reshape(b, s, nh, hp) * delta[..., None]  # Δ-scaled input
+    bmat = bc.reshape(b, s, g, n)
+    cmat = cc.reshape(b, s, g, n)
+    y = _ssd_chunked_jnp(
+        xh.astype(jnp.float32), a, bmat, cmat, chunk=min(ssd_chunk, s)
+    )
+    y = y + xr.reshape(b, s, nh, hp) * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(b, s, di)
+    # gated RMSNorm then output projection
+    y = rms_norm(y.astype(COMPUTE_DTYPE), p["norm"]) * jax.nn.silu(
+        z.astype(jnp.float32)
+    ).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bse,ed->bsd", _bf(y), _bf(p["wo"]))
+    out = pol.shard(out, "batch", None, None)
+    if not return_state:
+        return out
+    # final SSM state for prefill→decode handoff: recompute from tail
+    # (cheap closed form: state = Σ decay·b⊗x over the last chunk region)
+    state = _final_ssd_state(xh, a, bmat, nh // g)
+    conv_state = {
+        "x": jnp.einsum("bsd,de->bse", xb, _bf(p["wx"]))[:, -(cfg.conv_kernel - 1) :],
+        "b": bc_raw_tail(xb, p["wb"], cfg.conv_kernel),
+        "c": bc_raw_tail(xb, p["wc"], cfg.conv_kernel),
+    }
+    return out, {"ssm": state, "conv": conv_state}
+
+
+def bc_raw_tail(xb, w, k):
+    t = jnp.einsum("bsd,de->bse", xb, _bf(w))
+    return t[:, -(k - 1) :]
+
+
+def _final_ssd_state(xh, a, bmat, rep):
+    """h_S = Σ_s (Π_{u>s} a_u) b_s ⊗ x_s — vectorized over the sequence."""
+    log_a = jnp.log(a.astype(jnp.float32))  # [B,S,H]
+    cum = jnp.cumsum(log_a, axis=1)
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # [B,S,H]
+    bb = jnp.repeat(bmat, rep, axis=2)  # [B,S,H,N]
+    return jnp.einsum(
+        "bshn,bsh,bshp->bhnp", bb.astype(jnp.float32), decay_to_end, xh.astype(jnp.float32)
+    )
+
+
+def mamba2_decode(
+    x: jax.Array,
+    p: dict[str, jax.Array],
+    cache: dict[str, Any],
+    cfg: ArchConfig,
+    pol: ShardingPolicy,
+):
+    """One-token Mamba-2 step.  x: [B, 1, D]; cache: {"ssm": [B,H,N,P],
+    "conv": {x,b,c: [B,K-1,·]}}."""
+    b = x.shape[0]
+    di, nh, hp = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    xb = _bf(x[:, 0])
+    z = jnp.einsum("bd,de->be", xb, _bf(p["wz"]))
+    xr = jnp.einsum("bd,de->be", xb, _bf(p["wx"]))
+    bc = jnp.einsum("bd,de->be", xb, _bf(p["wb"]))
+    cc = jnp.einsum("bd,de->be", xb, _bf(p["wc"]))
+    dt = jnp.einsum("bd,dh->bh", xb, _bf(p["wdt"]))
+    conv = cache["conv"]
+    xr, cx = conv1d_step(xr, conv["x"], p["conv_x"])
+    bc, cb = conv1d_step(bc, conv["b"], p["conv_b"])
+    cc, ccs = conv1d_step(cc, conv["c"], p["conv_c"])
+    xr = jax.nn.silu(xr.astype(jnp.float32))
+    bc = jax.nn.silu(bc.astype(jnp.float32))
+    cc = jax.nn.silu(cc.astype(jnp.float32))
+    delta, a = _ssm_gates(dt, p)  # [B,H]
+    xh = xr.reshape(b, nh, hp) * delta[..., None]
+    bmat = jnp.repeat(bc.reshape(b, g, n), nh // g, axis=1)  # [B,H,N]
+    cmat = jnp.repeat(cc.reshape(b, g, n), nh // g, axis=1)
+    h = cache["ssm"]  # [B,H,N,P] f32
+    h = a[..., None, None] * h + bmat[..., :, None] * xh[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", cmat, h)
+    y = y + xr.reshape(b, nh, hp) * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(b, di)
+    y = rms_norm(y.astype(COMPUTE_DTYPE), p["norm"]) * jax.nn.silu(
+        z.astype(jnp.float32)
+    ).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("be,ed->bd", _bf(y), _bf(p["wo"]))[:, None]
+    return out, {"ssm": h, "conv": {"x": cx, "b": cb, "c": ccs}}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma) block
+# ---------------------------------------------------------------------------
+
+_LRU_C = 8.0
+
+
+def _rglru_gates(u: jax.Array, p: dict[str, jax.Array]):
+    """Input gate i_t = σ(u·W_i); recurrence gate r_t = σ(u·W_r);
+    a_t = exp(−c·softplus(Λ)·r_t);  b_t = √(1−a²)·i_t·u."""
+    uf = u.astype(jnp.float32)
+    gate_i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", _bf(u), _bf(p["w_gate_i"])).astype(jnp.float32))
+    gate_r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", _bf(u), _bf(p["w_gate_r"])).astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * gate_r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * gate_i * uf
+    return a, b
+
+
+def rglru_block(
+    x: jax.Array,
+    p: dict[str, jax.Array],
+    cfg: ArchConfig,
+    pol: ShardingPolicy,
+    *,
+    return_state: bool = False,
+):
+    """Griffin recurrent block: W_out(GeLU(W_g x) ⊙ RGLRU(conv(W_x x)))."""
+    from repro.kernels.ref import rglru_ref
+
+    b, s, d = x.shape
+    w = cfg.lru_width or d
+    xb = _bf(x)
+    gate_branch = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", xb, _bf(p["wg"])).astype(jnp.float32)
+    )
+    u = jnp.einsum("bsd,dw->bsw", xb, _bf(p["wx"]))
+    u = pol.shard(u, "batch", None, "tp")
+    u = causal_conv1d(u, p["conv"])
+    a, bb = _rglru_gates(u, p)
+    h = rglru_ref(a, bb)  # [B,S,W] fp32 trace
+    y = h * gate_branch
+    out = jnp.einsum("bsw,wd->bsd", _bf(y), _bf(p["wo"]))
+    out = pol.shard(out, "batch", None, None)
+    if not return_state:
+        return out
+    conv_tail = jnp.einsum("bsd,dw->bsw", xb, _bf(p["wx"]))[
+        :, -(cfg.conv_kernel - 1) :
+    ]
+    return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_tail}
+
+
+def rglru_decode(
+    x: jax.Array,
+    p: dict[str, jax.Array],
+    cache: dict[str, jax.Array],
+    cfg: ArchConfig,
+    pol: ShardingPolicy,
+):
+    """One-token RG-LRU step.  cache: {"h": [B,W], "conv": [B,K-1,W]}."""
+    xb = _bf(x[:, 0])
+    gate_branch = jax.nn.gelu(
+        jnp.einsum("bd,dw->bw", xb, _bf(p["wg"])).astype(jnp.float32)
+    )
+    u = jnp.einsum("bd,dw->bw", xb, _bf(p["wx"]))
+    u, conv_state = conv1d_step(u, cache["conv"], p["conv"])
+    a, bb = _rglru_gates(u, p)
+    h = a * cache["h"] + bb
+    y = h * gate_branch
+    out = jnp.einsum("bw,wd->bd", _bf(y), _bf(p["wo"]))[:, None]
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,593 @@
+"""LM assembly: heterogeneous layer stacks as scanned segments, param
+construction with sharding specs, loss, prefill and decode steps.
+
+Scan-over-layers: the layer pattern (e.g. RecurrentGemma's
+``(rglru, rglru, local)×12 + (rglru,)×2``) is grouped into *segments* of
+repeated units; each segment is one ``lax.scan`` over stacked params, so
+HLO size and compile time are depth-independent (80 production-mesh
+compiles on one CPU — DESIGN.md §5).  The scanned body is wrapped in
+``jax.checkpoint`` (full remat: only the residual stream is stashed per
+layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.sharding.policies import ShardingPolicy
+from repro.models import layers as L
+
+__all__ = [
+    "segments",
+    "padded_vocab",
+    "param_defs",
+    "init_params",
+    "abstract_params",
+    "param_specs",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "cache_specs",
+    "embed_inputs",
+]
+
+VOCAB_PAD = 2048
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    return int(math.ceil(cfg.vocab_size / VOCAB_PAD) * VOCAB_PAD)
+
+
+# ---------------------------------------------------------------------------
+# Segment grouping
+# ---------------------------------------------------------------------------
+
+
+def segments(cfg: ArchConfig) -> list[tuple[tuple[str, ...], int]]:
+    """Group the layer pattern into (unit, repeats) scan segments.
+
+    At each position, choose the unit length u ∈ {1..4} whose repetition
+    covers the most layers (ties → shortest unit)."""
+    pat = cfg.layer_pattern
+    out: list[tuple[tuple[str, ...], int]] = []
+    i = 0
+    while i < len(pat):
+        best_u, best_cover = 1, 0
+        for u in range(1, 5):
+            unit = pat[i : i + u]
+            if len(unit) < u:
+                break
+            r = 1
+            while pat[i + r * u : i + (r + 1) * u] == unit:
+                r += 1
+            cover = u * r
+            if cover > best_cover:
+                best_cover, best_u = cover, u
+        unit = pat[i : i + best_u]
+        repeats = best_cover // best_u
+        out.append((tuple(unit), repeats))
+        i += best_cover
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions (shape + sharding roles + init scale)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PDef:
+    shape: tuple[int, ...]
+    roles: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ssm_a | ssm_dt | lru_lam
+    scale: float = 0.02
+
+    @property
+    def dtype(self):
+        """Mixed precision: matrix params live in bf16 (so FSDP/TP
+        gathers and activation-grad collectives move half the bytes —
+        the fp32 master copy lives in the optimizer state); norm scales
+        and recurrence constants stay fp32 for numerics."""
+        if self.init == "normal" and len(self.shape) >= 2:
+            return jnp.bfloat16
+        return jnp.float32
+
+
+def _attn_defs(cfg: ArchConfig, r: int) -> dict[str, PDef]:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    out = {
+        "wq": PDef((r, d, hq * hd), (None, "fsdp", "tp")),
+        "wk": PDef((r, d, hkv * hd), (None, "fsdp", "tp")),
+        "wv": PDef((r, d, hkv * hd), (None, "fsdp", "tp")),
+        "wo": PDef((r, hq * hd, d), (None, "tp", "fsdp"), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        out |= {
+            "bq": PDef((r, hq * hd), (None, "tp"), init="zeros"),
+            "bk": PDef((r, hkv * hd), (None, "tp"), init="zeros"),
+            "bv": PDef((r, hkv * hd), (None, "tp"), init="zeros"),
+        }
+    if cfg.qk_norm:
+        out |= {
+            "q_norm": PDef((r, hd), (None, None), init="zeros"),
+            "k_norm": PDef((r, hd), (None, None), init="zeros"),
+        }
+    return out
+
+
+def _ssm_defs(cfg: ArchConfig, r: int) -> dict[str, PDef]:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh, k = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.conv_kernel
+    return {
+        "wz": PDef((r, d, di), (None, "fsdp", "tp")),
+        "wx": PDef((r, d, di), (None, "fsdp", "tp")),
+        "wb": PDef((r, d, g * n), (None, "fsdp", None)),
+        "wc": PDef((r, d, g * n), (None, "fsdp", None)),
+        "wdt": PDef((r, d, nh), (None, "fsdp", "tp")),
+        "conv_x": PDef((r, k, di), (None, None, "tp"), scale=1.0 / math.sqrt(k)),
+        "conv_b": PDef((r, k, g * n), (None, None, None), scale=1.0 / math.sqrt(k)),
+        "conv_c": PDef((r, k, g * n), (None, None, None), scale=1.0 / math.sqrt(k)),
+        "A_log": PDef((r, nh), (None, "tp"), init="ssm_a"),
+        "dt_bias": PDef((r, nh), (None, "tp"), init="ssm_dt"),
+        "d_skip": PDef((r, nh), (None, "tp"), init="zeros"),
+        "norm": PDef((r, di), (None, "tp"), init="zeros"),
+        "wo": PDef((r, di, d), (None, "tp", "fsdp"), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _rglru_defs(cfg: ArchConfig, r: int) -> dict[str, PDef]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    k = cfg.conv_kernel
+    return {
+        "wg": PDef((r, d, w), (None, "fsdp", "tp")),
+        "wx": PDef((r, d, w), (None, "fsdp", "tp")),
+        "conv": PDef((r, k, w), (None, None, "tp"), scale=1.0 / math.sqrt(k)),
+        "w_gate_i": PDef((r, w, w), (None, "fsdp", "tp"), scale=1.0 / math.sqrt(w)),
+        "w_gate_r": PDef((r, w, w), (None, "fsdp", "tp"), scale=1.0 / math.sqrt(w)),
+        "lam": PDef((r, w), (None, "tp"), init="lru_lam"),
+        "wo": PDef((r, w, d), (None, "tp", "fsdp"), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _mlp_defs(cfg: ArchConfig, r: int) -> dict[str, PDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.n_experts:
+        e = cfg.n_experts
+        ep = True  # resolved per policy at runtime; specs carry 'ep' role
+        if cfg.n_experts < 16:
+            # few big experts → TP inside each expert (mixtral mode)
+            return {
+                "router": PDef((r, d, e), (None, "fsdp", None)),
+                "w_in": PDef((r, e, d, f), (None, None, "fsdp", "tp")),
+                "w_gate": PDef((r, e, d, f), (None, None, "fsdp", "tp")),
+                "w_out": PDef((r, e, f, d), (None, None, "tp", "fsdp"), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+            }
+        return {
+            "router": PDef((r, d, e), (None, "fsdp", None)),
+            "w_in": PDef((r, e, d, f), (None, "ep", "fsdp", None)),
+            "w_gate": PDef((r, e, d, f), (None, "ep", "fsdp", None)),
+            "w_out": PDef((r, e, f, d), (None, "ep", None, "fsdp"), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+        }
+    return {
+        "wi": PDef((r, d, f), (None, "fsdp", "tp")),
+        "wg": PDef((r, d, f), (None, "fsdp", "tp")),
+        "wo": PDef((r, f, d), (None, "tp", "fsdp"), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def param_defs(cfg: ArchConfig) -> dict[str, Any]:
+    """Nested dict of PDef mirroring the param pytree."""
+    d = cfg.d_model
+    vp = padded_vocab(cfg)
+    defs: dict[str, Any] = {
+        "embed": {"tok": PDef((vp, d), ("tp", None), scale=1.0)},
+        "final_norm": PDef((d,), (None,), init="zeros"),
+    }
+    if cfg.modality == "vlm":
+        defs["embed"]["vision_proj"] = PDef((d, d), ("fsdp", "tp"), scale=1.0 / math.sqrt(d))
+    if cfg.modality == "audio" and cfg.n_codebooks > 1:
+        defs["embed"]["codebooks"] = PDef(
+            (cfg.n_codebooks - 1, vp, d), (None, "tp", None), scale=1.0
+        )
+        defs["unembed_codebooks"] = PDef(
+            (cfg.n_codebooks - 1, d, vp), (None, None, "tp")
+        )
+    if not cfg.tie_embeddings:
+        defs["unembed"] = PDef((d, vp), (None, "tp"))
+    has_mlp = cfg.d_ff > 0 or cfg.n_experts > 0
+    for i, (unit, r) in enumerate(segments(cfg)):
+        seg: dict[str, Any] = {}
+        for j, mixer in enumerate(unit):
+            seg[f"ln1_{j}"] = PDef((r, d), (None, None), init="zeros")
+            if mixer in ("full", "swa", "local"):
+                seg[f"m{j}"] = _attn_defs(cfg, r)
+            elif mixer == "ssm":
+                seg[f"m{j}"] = _ssm_defs(cfg, r)
+            elif mixer == "rglru":
+                seg[f"m{j}"] = _rglru_defs(cfg, r)
+            else:
+                raise ValueError(mixer)
+            if has_mlp:
+                seg[f"ln2_{j}"] = PDef((r, d), (None, None), init="zeros")
+                seg[f"mlp{j}"] = _mlp_defs(cfg, r)
+        defs[f"seg{i}"] = seg
+    return defs
+
+
+def _init_leaf(key: jax.Array, pd: PDef) -> jax.Array:
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, pd.dtype)
+    if pd.init == "normal":
+        return pd.scale * jax.random.normal(key, pd.shape, pd.dtype)
+    if pd.init == "ssm_a":  # A ∈ [1, 16] → A_log
+        u = jax.random.uniform(key, pd.shape, pd.dtype, 1.0, 16.0)
+        return jnp.log(u)
+    if pd.init == "ssm_dt":  # softplus(dt_bias) ∈ [1e-3, 0.1]
+        u = jax.random.uniform(
+            key, pd.shape, pd.dtype, math.log(1e-3), math.log(0.1)
+        )
+        dt = jnp.exp(u)
+        return dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    if pd.init == "lru_lam":  # a^c ∈ [0.9, 0.999] at σ(r)=0.5ish
+        u = jax.random.uniform(key, pd.shape, pd.dtype, 0.9, 0.999)
+        target = -jnp.log(u) * 2.0 / L._LRU_C  # softplus(lam) target
+        return jnp.log(jnp.expm1(jnp.clip(target, 1e-6)))
+    raise ValueError(pd.init)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    """Materialize parameters (used at smoke-test scale and by train.py)."""
+    defs = param_defs(cfg)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, PDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, pd) for k, pd in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_specs(cfg: ArchConfig, pol: ShardingPolicy) -> dict:
+    """PartitionSpec pytree matching init_params' structure."""
+    defs = param_defs(cfg)
+    return jax.tree.map(
+        lambda pd: pol.spec(*pd.roles),
+        defs,
+        is_leaf=lambda x: isinstance(x, PDef),
+    )
+
+
+def abstract_params(cfg: ArchConfig, pol: ShardingPolicy) -> dict:
+    """ShapeDtypeStruct pytree with shardings (dry-run: no allocation)."""
+    defs = param_defs(cfg)
+    specs = param_specs(cfg, pol)
+    return jax.tree.map(
+        lambda pd, sp: jax.ShapeDtypeStruct(
+            pd.shape, pd.dtype, sharding=pol.named_from_spec(sp)
+        )
+        if pol.mesh is not None
+        else jax.ShapeDtypeStruct(pd.shape, pd.dtype),
+        defs,
+        specs,
+        is_leaf=lambda x: isinstance(x, PDef),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params: dict, batch: dict, cfg: ArchConfig, pol: ShardingPolicy):
+    """Token (+ modality stub) embedding → [B, S, D] residual stream."""
+    emb = params["embed"]["tok"]
+    if cfg.modality == "audio" and cfg.n_codebooks > 1:
+        toks = batch["tokens"]  # [B, S, ncb]
+        x = jnp.take(emb, toks[..., 0], axis=0)
+        for cb in range(cfg.n_codebooks - 1):
+            x = x + jnp.take(params["embed"]["codebooks"][cb], toks[..., cb + 1], axis=0)
+    else:
+        x = jnp.take(emb, batch["tokens"], axis=0)  # [B, S, D]
+    if cfg.modality == "vlm" and "vision_embed" in batch:
+        ve = jnp.einsum(
+            "bsd,de->bse",
+            batch["vision_embed"].astype(jnp.float32),
+            params["embed"]["vision_proj"].astype(jnp.float32),
+        )
+        x = jnp.concatenate([ve.astype(x.dtype), x], axis=1)
+    return pol.shard(x.astype(L.COMPUTE_DTYPE), "batch", None, None)
+
+
+def _mixer_apply(h, lp, j, mixer, cfg, pol):
+    y = L.rms_norm(h, lp[f"ln1_{j}"])
+    if mixer in ("full", "swa", "local"):
+        return L.attention_block(y, lp[f"m{j}"], cfg, mixer, pol)
+    if mixer == "ssm":
+        return L.mamba2_block(y, lp[f"m{j}"], cfg, pol)
+    if mixer == "rglru":
+        return L.rglru_block(y, lp[f"m{j}"], cfg, pol)
+    raise ValueError(mixer)
+
+
+def _mlp_apply(h, lp, j, cfg, pol):
+    y = L.rms_norm(h, lp[f"ln2_{j}"])
+    if cfg.n_experts:
+        return L.moe_block(y, lp[f"mlp{j}"], cfg, pol)
+    return L.swiglu_mlp(y, lp[f"mlp{j}"], pol)
+
+
+def forward(params: dict, x: jax.Array, cfg: ArchConfig, pol: ShardingPolicy):
+    """Residual stream through all segments.  x: [B, S, D] → [B, S, D]."""
+    has_mlp = cfg.d_ff > 0 or cfg.n_experts > 0
+
+    for i, (unit, r) in enumerate(segments(cfg)):
+
+        def body(h, lp, unit=unit):
+            h = pol.shard(h, "batch", None, None)
+            for j, mixer in enumerate(unit):
+                h = h + _mixer_apply(h, lp, j, mixer, cfg, pol)
+                if has_mlp:
+                    h = h + _mlp_apply(h, lp, j, cfg, pol)
+            return pol.shard(h, "batch", None, None), None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, params[f"seg{i}"])
+    return L.rms_norm(x, params["final_norm"])
+
+
+def lm_logits(params: dict, h: jax.Array, cfg: ArchConfig, pol: ShardingPolicy):
+    """Final-norm hidden → vocab logits (padded vocab masked to -inf).
+
+    Returns [B, S, Vp] (or [B, S, ncb, Vp] for multi-codebook audio)."""
+    vp = padded_vocab(cfg)
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].T  # [D, Vp]
+    else:
+        w = params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", L._bf(h), L._bf(w)).astype(jnp.float32)
+    if cfg.modality == "audio" and cfg.n_codebooks > 1:
+        extra = jnp.einsum(
+            "bsd,kdv->bksv", L._bf(h), L._bf(params["unembed_codebooks"])
+        ).astype(jnp.float32)
+        logits = jnp.concatenate([logits[:, None], jnp.moveaxis(extra, 1, 1)], axis=1)
+        logits = jnp.moveaxis(logits, 1, 2)  # [B, S, ncb, Vp]
+    if vp != cfg.vocab_size:
+        valid = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(valid, logits, -1e30)
+    if logits.ndim == 3:
+        return pol.shard(logits, "batch", None, "tp")
+    return pol.shard(logits, "batch", None, None, "tp")
+
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig, pol: ShardingPolicy):
+    """Mean next-token cross-entropy (labels pre-shifted upstream)."""
+    x = embed_inputs(params, batch, cfg, pol)
+    h = forward(params, x, cfg, pol)
+    logits = lm_logits(params, h, cfg, pol)
+    labels = batch["labels"]
+    if cfg.modality == "vlm":
+        # loss over the text region only (vision prefix has no labels)
+        logits = logits[:, -labels.shape[1] :]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(cfg: ArchConfig, mixer: str, max_len: int) -> int:
+    if mixer == "swa":
+        return min(cfg.window or max_len, max_len)
+    if mixer == "local":
+        return min(cfg.local_window or max_len, max_len)
+    return max_len
+
+
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int, pol: ShardingPolicy
+) -> list[dict]:
+    """Zero/empty decode caches, one entry per segment."""
+    out = []
+    for unit, r in segments(cfg):
+        seg: dict[str, Any] = {}
+        for j, mixer in enumerate(unit):
+            if mixer in ("full", "swa", "local"):
+                w = _cache_len(cfg, mixer, max_len)
+                seg[str(j)] = {
+                    "k": jnp.zeros((r, batch, w, cfg.n_kv_heads, cfg.head_dim), L.COMPUTE_DTYPE),
+                    "v": jnp.zeros((r, batch, w, cfg.n_kv_heads, cfg.head_dim), L.COMPUTE_DTYPE),
+                    "slot_pos": jnp.full((r, w), -1, jnp.int32),
+                }
+            elif mixer == "ssm":
+                seg[str(j)] = {
+                    "ssm": jnp.zeros(
+                        (r, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                        jnp.float32,
+                    ),
+                    "conv": {
+                        "x": jnp.zeros((r, batch, cfg.conv_kernel - 1, cfg.d_inner), L.COMPUTE_DTYPE),
+                        "b": jnp.zeros((r, batch, cfg.conv_kernel - 1, cfg.ssm_groups * cfg.ssm_state), L.COMPUTE_DTYPE),
+                        "c": jnp.zeros((r, batch, cfg.conv_kernel - 1, cfg.ssm_groups * cfg.ssm_state), L.COMPUTE_DTYPE),
+                    },
+                }
+            elif mixer == "rglru":
+                w = cfg.lru_width or cfg.d_model
+                seg[str(j)] = {
+                    "h": jnp.zeros((r, batch, w), jnp.float32),
+                    "conv": jnp.zeros((r, batch, cfg.conv_kernel - 1, w), L.COMPUTE_DTYPE),
+                }
+        out.append(seg)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, pol: ShardingPolicy) -> list[dict]:
+    """PartitionSpec pytree matching init_cache's structure."""
+    out = []
+    for unit, r in segments(cfg):
+        seg: dict[str, Any] = {}
+        for j, mixer in enumerate(unit):
+            if mixer in ("full", "swa", "local"):
+                heads_tp = pol.tp_size > 1 and cfg.n_kv_heads % pol.tp_size == 0
+                kv_spec = (
+                    pol.spec(None, "batch", None, "tp", None)
+                    if heads_tp
+                    else pol.spec(None, "batch", "tp", None, None)
+                )
+                seg[str(j)] = {
+                    "k": kv_spec,
+                    "v": kv_spec,
+                    "slot_pos": pol.spec(None, None),
+                }
+            elif mixer == "ssm":
+                seg[str(j)] = {
+                    "ssm": pol.spec(None, "batch", "tp", None, None),
+                    "conv": {
+                        "x": pol.spec(None, "batch", None, "tp"),
+                        "b": pol.spec(None, "batch", None, None),
+                        "c": pol.spec(None, "batch", None, None),
+                    },
+                }
+            elif mixer == "rglru":
+                seg[str(j)] = {
+                    "h": pol.spec(None, "batch", "tp"),
+                    "conv": pol.spec(None, "batch", None, "tp"),
+                }
+        out.append(seg)
+    return out
+
+
+def decode_step(
+    params: dict,
+    caches: list[dict],
+    batch: dict,
+    pos: jax.Array,
+    cfg: ArchConfig,
+    pol: ShardingPolicy,
+):
+    """One decode step.  batch["tokens"]: [B, 1] (or [B, 1, ncb]).
+
+    The stacked cache rides in the scan CARRY and each layer's slice is
+    updated with a leading-dim dynamic-update-slice — XLA aliases loop
+    carries in place, so (with the jit donating the cache argument) the
+    multi-GiB KV cache exists exactly once.  Passing it as scan xs/ys
+    instead double-buffers it (input stack + ys accumulator).
+
+    Returns (logits [B, Vp] (or [B, ncb, Vp]), new caches)."""
+    has_mlp = cfg.d_ff > 0 or cfg.n_experts > 0
+    x = embed_inputs(params, batch, cfg, pol)  # [B,1,D]
+    new_caches = []
+    for i, (unit, r) in enumerate(segments(cfg)):
+
+        def body(carry, inp, unit=unit):
+            h, cache_seg = carry
+            lp, li = inp
+            cache_l = jax.tree.map(
+                lambda c: jax.lax.dynamic_index_in_dim(c, li, 0, keepdims=False),
+                cache_seg,
+            )
+            ncs = {}
+            for j, mixer in enumerate(unit):
+                y = L.rms_norm(h, lp[f"ln1_{j}"])
+                if mixer in ("full", "swa", "local"):
+                    y, nc = L.attention_decode(
+                        y, lp[f"m{j}"], cache_l[str(j)], pos, cfg, mixer, pol
+                    )
+                elif mixer == "ssm":
+                    y, nc = L.mamba2_decode(y, lp[f"m{j}"], cache_l[str(j)], cfg, pol)
+                elif mixer == "rglru":
+                    y, nc = L.rglru_decode(y, lp[f"m{j}"], cache_l[str(j)], cfg, pol)
+                h = h + y
+                ncs[str(j)] = nc
+                if has_mlp:
+                    h = h + _mlp_apply(h, lp, j, cfg, pol)
+            cache_seg = jax.tree.map(
+                lambda c, nc2: jax.lax.dynamic_update_slice(
+                    c, nc2[None].astype(c.dtype), (li,) + (0,) * nc2.ndim
+                ),
+                cache_seg,
+                ncs,
+            )
+            return (h, cache_seg), None
+
+        (x, nc), _ = jax.lax.scan(
+            body, (x, caches[i]), (params[f"seg{i}"], jnp.arange(r))
+        )
+        new_caches.append(nc)
+    h = L.rms_norm(x, params["final_norm"])
+    logits = lm_logits(params, h, cfg, pol)
+    return logits[:, -1], new_caches
+
+
+def prefill(
+    params: dict,
+    batch: dict,
+    cfg: ArchConfig,
+    pol: ShardingPolicy,
+    *,
+    max_len: int | None = None,
+):
+    """Full-sequence forward returning last-position logits + caches.
+
+    ``max_len`` sizes the full-attention KV caches for continued decode
+    (≥ S; default S — sufficient for prefill-only lowering, but decode
+    past S requires headroom: a write beyond the cache length is a
+    silent no-op by construction of the masked ring write).  Windowed
+    mixers always allocate exactly their window (ring-aligned; S must
+    be a window multiple)."""
+    has_mlp = cfg.d_ff > 0 or cfg.n_experts > 0
+    x = embed_inputs(params, batch, cfg, pol)
+    s = x.shape[1]
+    if max_len is not None and max_len < s:
+        raise ValueError(f"max_len {max_len} < sequence {s}")
+    caches = []
+    for i, (unit, r) in enumerate(segments(cfg)):
+
+        def body(h, lp, unit=unit):
+            h = pol.shard(h, "batch", None, None)
+            ncs = {}
+            for j, mixer in enumerate(unit):
+                y = L.rms_norm(h, lp[f"ln1_{j}"])
+                if mixer in ("full", "swa", "local"):
+                    w = _cache_len(cfg, mixer, max_len or s)
+                    y, (k, v) = L.attention_block(
+                        y, lp[f"m{j}"], cfg, mixer, pol, return_kv=True
+                    )
+                    if w <= s:  # windowed (or exact-fit full) cache
+                        kc, vc = k[:, -w:], v[:, -w:]
+                        sp = jnp.arange(s - w, s, dtype=jnp.int32)
+                    else:  # headroom for decode: pad beyond S
+                        pad = [(0, 0), (0, w - s), (0, 0), (0, 0)]
+                        kc = jnp.pad(k, pad)
+                        vc = jnp.pad(v, pad)
+                        sp = jnp.concatenate(
+                            [
+                                jnp.arange(s, dtype=jnp.int32),
+                                jnp.full((w - s,), -1, jnp.int32),
+                            ]
+                        )
+                    ncs[str(j)] = {"k": kc, "v": vc, "slot_pos": sp}
+                elif mixer == "ssm":
+                    y, st = L.mamba2_block(y, lp[f"m{j}"], cfg, pol, return_state=True)
+                    ncs[str(j)] = st
+                elif mixer == "rglru":
+                    y, st = L.rglru_block(y, lp[f"m{j}"], cfg, pol, return_state=True)
+                    ncs[str(j)] = st
+                h = h + y
+                if has_mlp:
+                    h = h + _mlp_apply(h, lp, j, cfg, pol)
+            return pol.shard(h, "batch", None, None), ncs
+
+        x, ncs = jax.lax.scan(jax.checkpoint(body), x, params[f"seg{i}"])
+        caches.append(ncs)
+    h = L.rms_norm(x, params["final_norm"])
+    logits = lm_logits(params, h[:, -1:], cfg, pol)
+    return logits[:, 0], caches

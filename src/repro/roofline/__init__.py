@@ -1,0 +1,8 @@
+"""Roofline layer: trip-count-aware HLO analysis + the 3-term model."""
+from repro.roofline.analysis import HW, V5E, RooflineReport, model_flops, roofline
+from repro.roofline.hlo import HloTotals, analyze, parse_module, top_collectives
+
+__all__ = [
+    "HW", "V5E", "RooflineReport", "model_flops", "roofline",
+    "HloTotals", "analyze", "parse_module", "top_collectives",
+]

@@ -1,0 +1,93 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+Terms (per assignment; all per-chip, seconds):
+
+    compute    = HLO_FLOPs / peak_FLOP/s          (197 TFLOP/s bf16, v5e)
+    memory     = HLO_bytes / HBM_bw               (819 GB/s)
+    collective = collective_bytes / link_bw       (~50 GB/s/link ICI)
+
+Post-SPMD HLO shapes are per-device, so the parsed totals are already
+per-chip — dividing by per-chip peaks gives the per-step seconds each
+subsystem needs; the largest is the bottleneck.  ``model_flops`` is the
+6·N·D (train) / 2·N·D (inference) useful-work convention (N = active
+params), whose ratio against HLO FLOPs exposes remat/masking waste.
+
+Cross-pod traffic is additionally charged against the (slower) DCI
+bandwidth — the multi-pod analogue of the paper's inter-group links.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline.hlo import HloTotals
+
+__all__ = ["HW", "V5E", "RooflineReport", "roofline", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float  # bf16 FLOP/s per chip
+    hbm_bw: float  # bytes/s per chip
+    ici_bw: float  # bytes/s per link
+    dci_bw: float  # bytes/s per chip across the pod boundary
+    hbm_per_chip: float = 16e9
+
+
+V5E = HW(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9, dci_bw=12.5e9)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    cross_pod_s: float
+    dominant: str
+    bound_s: float
+    model_flops_per_chip: float
+    useful_ratio: float  # model flops / HLO flops
+    roofline_fraction: float  # compute_s / bound_s (1.0 = compute-bound at peak)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(
+    active_params: int, tokens: int, kind: str
+) -> float:
+    """6·N·D for training, 2·N·D for inference forward passes."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active_params * tokens
+
+
+def roofline(
+    totals: HloTotals,
+    *,
+    n_devices: int,
+    model_flops_global: float,
+    hw: HW = V5E,
+) -> RooflineReport:
+    compute_s = totals.flops / hw.peak_flops
+    memory_s = totals.hbm_bytes / hw.hbm_bw
+    collective_s = totals.coll_ring_bytes / hw.ici_bw
+    cross_pod_s = totals.cross_pod_bytes / hw.dci_bw
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": max(collective_s, cross_pod_s),
+    }
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    mf = model_flops_global / n_devices
+    return RooflineReport(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        cross_pod_s=cross_pod_s,
+        dominant=dominant,
+        bound_s=bound_s,
+        model_flops_per_chip=mf,
+        useful_ratio=mf / totals.flops if totals.flops else 0.0,
+        roofline_fraction=(mf / hw.peak_flops) / bound_s if bound_s else 0.0,
+    )

@@ -1,0 +1,456 @@
+"""Post-SPMD HLO parser: FLOPs, HBM bytes, and collective traffic with
+while-loop trip counts applied.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` visits a while body
+ONCE — a 60-layer scanned transformer reports 1/60th of its FLOPs
+(verified empirically; see tests/test_roofline.py).  Since the whole
+framework scans over layers *and* microbatches, honest roofline terms
+require walking the HLO computation graph and multiplying every while
+body by its trip count (XLA annotates ``known_trip_count`` on the while
+op's backend_config; we fall back to the loop-condition constant).
+
+Accounting conventions (documented in EXPERIMENTS.md):
+  * FLOPs: 2·M·N·K for dots (from result shape × contraction dims),
+    element count for reduces.  Post-partitioning shapes are per-device,
+    so totals are **per-chip** — matching `peak_FLOP/s per chip`.
+  * HBM bytes: Σ (result + operand bytes) over non-fused op boundaries
+    (fusion internals are register/VMEM-resident by construction).
+  * Collectives: per op, the **operand bytes** (assignment convention)
+    plus a ring-model byte estimate; replica groups are parsed (explicit
+    or iota form) to classify pod-crossing vs intra-pod traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Any
+
+import numpy as np
+
+__all__ = ["parse_module", "analyze", "HloTotals"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "all-to-all-start", "ragged-all-to-all",
+}
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+# HBM-byte accounting uses a TPU-fusion model: the CPU backend leaves
+# elementwise chains (convert/broadcast/add/...) unfused that the TPU
+# compiler provably fuses into neighbors, so counting every op boundary
+# overestimates HBM traffic ~10×.  Only ops that materialize data on a
+# real TPU are charged; elementwise ops between them ride along free.
+_HBM_OPS = {
+    "fusion", "call", "dot", "convolution", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "reduce-window", "sort", "gather",
+    "scatter", "concatenate", "pad", "copy", "transpose", "rng",
+    "rng-bit-generator", "cholesky", "triangular-solve", "custom-call",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?[^=]+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[str, list[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attributes (raw tail of the line)
+
+    @property
+    def result_bytes(self) -> float:
+        return _shape_bytes(self.type_str)
+
+
+@dataclasses.dataclass
+class HloTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_operand_bytes: float = 0.0
+    coll_ring_bytes: float = 0.0
+    cross_pod_bytes: float = 0.0
+    coll_counts: dict[str, int] = dataclasses.field(default_factory=dict)
+    coll_bytes_by_kind: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "HloTotals", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        self.coll_operand_bytes += mult * other.coll_operand_bytes
+        self.coll_ring_bytes += mult * other.coll_ring_bytes
+        self.cross_pod_bytes += mult * other.cross_pod_bytes
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + int(mult * v)
+        for k, v in other.coll_bytes_by_kind.items():
+            self.coll_bytes_by_kind[k] = self.coll_bytes_by_kind.get(k, 0.0) + mult * v
+
+
+def parse_module(text: str) -> tuple[dict[str, list[Op]], str]:
+    """Split HLO text into computations.  Returns ({name: ops}, entry)."""
+    comps: dict[str, list[Op]] = {}
+    entry = ""
+    cur: list[Op] | None = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            name = m.group(2)
+            comps[name] = []
+            cur = comps[name]
+            if m.group(1):
+                entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        if "/*" in line:  # long tuple types carry /*index=N*/ comments
+            line = re.sub(r"/\*.*?\*/", "", line)
+        om = _OP_RE.match(line)
+        if om:
+            cur.append(Op(om.group(1), om.group(2).strip(), om.group(3), om.group(4)))
+    return comps, entry
+
+
+def _symbol_table(ops: list[Op]) -> dict[str, str]:
+    return {op.name: op.type_str for op in ops}
+
+
+def _operands(op: Op) -> list[str]:
+    """Operand names — everything before the first '),' boundary."""
+    depth, end = 1, len(op.rest)
+    for i, ch in enumerate(op.rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERAND_RE.findall(op.rest[:end])
+
+
+def _attr(op: Op, key: str) -> str | None:
+    m = re.search(re.escape(key) + r"=(\{.*?\}|\[[^\]]*\](?:<=\[[\d,]+\])?(?:T\([\d,]+\))?|[\w\.\-\"]+)", op.rest)
+    return m.group(1) if m else None
+
+
+def _replica_groups(op: Op, n_devices: int) -> list[list[int]] | None:
+    raw = re.search(r"replica_groups=(\{\{[\d,\{\}]*\}\}|\[[\d,]+\]<=\[[\d,]+\](?:T\(([\d,]+)\))?)", op.rest)
+    if not raw:
+        return None
+    s = raw.group(1)
+    if s.startswith("{{"):
+        return [
+            [int(x) for x in grp.split(",") if x]
+            for grp in re.findall(r"\{([\d,]*)\}", s[1:-1])
+        ]
+    m = re.match(r"\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", s)
+    if not m:
+        return None
+    g, size = int(m.group(1)), int(m.group(2))
+    reshape = [int(x) for x in m.group(3).split(",")]
+    arr = np.arange(int(np.prod(reshape))).reshape(reshape)
+    if m.group(4):
+        arr = arr.transpose([int(x) for x in m.group(4).split(",")])
+    return arr.reshape(g, size).tolist()
+
+
+def _group_size(groups: list[list[int]] | None) -> int:
+    if not groups or not groups[0]:
+        return 1
+    return len(groups[0])
+
+
+def _crosses_pod(groups: list[list[int]] | None, pod_size: int) -> bool:
+    if not groups:
+        return False
+    for g in groups:
+        pods = {d // pod_size for d in g}
+        if len(pods) > 1:
+            return True
+    return False
+
+
+def _dot_flops(op: Op, sym: dict[str, str]) -> float:
+    out_elems = 1.0
+    _, dims = _shape_dims(op.type_str)
+    for d in dims:
+        out_elems *= d
+    lhs_names = _operands(op)
+    contract = 1.0
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if m and lhs_names:
+        lhs_type = sym.get(lhs_names[0], "")
+        _, lhs_dims = _shape_dims(lhs_type)
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(op: Op, comps: dict[str, list[Op]]) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=%([\w\.\-]+)", op.rest)
+    if cm and cm.group(1) in comps:
+        consts = [
+            int(v)
+            for o in comps[cm.group(1)]
+            for v in re.findall(r"constant\((\d+)\)", o.rest)
+        ]
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _source_dtype_scale(op: Op, ops: list[Op], comps: dict[str, list[Op]]) -> float:
+    """Ratio (≤1) between a collective's semantic payload dtype and the
+    dtype it is transported in.
+
+    The CPU backend emulates bf16 matmuls by converting to f32 (often as
+    explicit bf16 round-trip fusions), and XLA hoists those converts
+    above collectives — so an all-gather that a TPU build runs in bf16
+    shows up here as f32.  We chase the operand through convert / copy /
+    bitcast / convert-only-fusion / upstream-collective chains and take
+    the smallest dtype any convert touched as the payload dtype."""
+    opnds = _operands(op)
+    if len(opnds) > 1 and op.type_str.startswith("("):
+        # tuple collective (e.g. grouped all-reduce): resolve each
+        # component independently and weight by its byte share
+        total_b = scaled = 0.0
+        by_name = {o.name: o for o in ops}
+        for name in opnds:
+            d = by_name.get(name)
+            if d is None:
+                continue
+            sub = Op(op.name, d.type_str, op.opcode, f"%{name})" + op.rest[op.rest.find(')') + 1 :])
+            b = _shape_bytes(d.type_str)
+            total_b += b
+            scaled += b * _source_dtype_scale(sub, ops, comps)
+        return scaled / total_b if total_b else 1.0
+    dst_dt = _DTYPE_BYTES.get(_shape_dims(op.type_str)[0], 4)
+    min_dt = dst_dt
+    by_name = {o.name: o for o in ops}
+    cur = next(iter(_operands(op)), None)
+    for _ in range(6):
+        if cur is None or cur not in by_name:
+            break
+        d = by_name[cur]
+        if d.opcode == "convert":
+            res_dt = _DTYPE_BYTES.get(_shape_dims(d.type_str)[0], dst_dt)
+            src = next(iter(_operands(d)), None)
+            src_dt = _DTYPE_BYTES.get(
+                _shape_dims(by_name[src].type_str if src in by_name else "")[0],
+                res_dt,
+            ) if src else res_dt
+            min_dt = min(min_dt, res_dt, src_dt or res_dt)
+            cur = src
+            continue
+        if d.opcode in ("copy", "bitcast") or d.opcode in _COLLECTIVES:
+            cur = next(iter(_operands(d)), None)
+            continue
+        if d.opcode == "fusion":
+            cm = re.search(r"calls=%([\w\.\-]+)", d.rest)
+            inner = comps.get(cm.group(1), []) if cm else []
+            if inner and all(
+                o.opcode in ("parameter", "convert", "bitcast", "copy", "transpose")
+                for o in inner
+            ):
+                for o in inner:
+                    if o.opcode == "convert":
+                        min_dt = min(
+                            min_dt,
+                            _DTYPE_BYTES.get(_shape_dims(o.type_str)[0], dst_dt),
+                        )
+                cur = next(iter(_operands(d)), None)
+                continue
+        break
+    return min_dt / dst_dt if 0 < min_dt < dst_dt else 1.0
+
+
+def analyze(text: str, *, n_devices: int, pod_size: int | None = None) -> HloTotals:
+    """Walk the entry computation, multiplying while bodies by trip count.
+
+    ``pod_size``: devices per pod (for cross-pod classification); default
+    = n_devices (nothing crosses).
+    """
+    comps, entry = parse_module(text)
+    pod_size = pod_size or n_devices
+    memo: dict[tuple[str, bool], HloTotals] = {}
+
+    def comp_totals(name: str, fused: bool) -> HloTotals:
+        key = (name, fused)
+        if key in memo:
+            return memo[key]
+        memo[key] = HloTotals()  # cycle guard
+        ops = comps.get(name, [])
+        sym = _symbol_table(ops)
+        t = HloTotals()
+        for op in ops:
+            oc = op.opcode
+            if oc == "while":
+                bm = re.search(r"body=%([\w\.\-]+)", op.rest)
+                if bm:
+                    t.add(comp_totals(bm.group(1), False), _trip_count(op, comps))
+                continue
+            if oc in ("fusion", "call", "async-start"):
+                cm = re.search(r"calls=%([\w\.\-]+)|to_apply=%([\w\.\-]+)", op.rest)
+                if cm:
+                    t.add(comp_totals(cm.group(1) or cm.group(2), True), 1.0)
+                # fusion boundaries are NOT charged to HBM: the CPU
+                # backend emits one kLoop fusion per elementwise op,
+                # which the TPU compiler provably merges into producer/
+                # consumer chains (see module docstring).
+                continue
+            if oc == "conditional":
+                branches = re.findall(r"branch_computations=\{([^\}]*)\}", op.rest)
+                names = _OPERAND_RE.findall(branches[0]) if branches else []
+                if names:
+                    sub = [comp_totals(n, False) for n in names]
+                    worst = max(sub, key=lambda s: s.flops)
+                    t.add(worst, 1.0)
+                continue
+            if oc == "dot":
+                t.flops += _dot_flops(op, sym)
+            elif oc in ("reduce", "reduce-window"):
+                opnds = _operands(op)
+                if opnds:
+                    t.flops += _shape_bytes(sym.get(opnds[0], "")) / max(
+                        _DTYPE_BYTES.get(_shape_dims(sym.get(opnds[0], ""))[0], 1), 1
+                    )
+            if oc in _COLLECTIVES:
+                kind = oc.replace("-start", "")
+                groups = _replica_groups(op, n_devices)
+                gsize = _group_size(groups)
+                rb = op.result_bytes
+                # CPU-backend artifact: bf16 dots are emulated via
+                # convert(bf16→f32) and XLA hoists the convert above
+                # collectives; a TPU build moves bf16.  Scale convert-fed
+                # collectives back to the source dtype (resolving through
+                # single-op convert fusions / copies / bitcasts).
+                rb *= _source_dtype_scale(op, ops, comps)
+                if kind == "all-gather":
+                    operand_b = rb / max(gsize, 1)
+                    ring_b = rb - operand_b
+                elif kind == "reduce-scatter":
+                    operand_b = rb * gsize
+                    ring_b = operand_b * (gsize - 1) / max(gsize, 1)
+                elif kind == "all-reduce":
+                    operand_b = rb
+                    ring_b = 2.0 * rb * (gsize - 1) / max(gsize, 1)
+                else:  # all-to-all, collective-permute, ragged
+                    operand_b = rb
+                    ring_b = rb * (gsize - 1) / max(gsize, 1) if gsize > 1 else rb
+                t.coll_operand_bytes += operand_b
+                t.coll_ring_bytes += ring_b
+                t.coll_counts[kind] = t.coll_counts.get(kind, 0) + 1
+                t.coll_bytes_by_kind[kind] = (
+                    t.coll_bytes_by_kind.get(kind, 0.0) + operand_b
+                )
+                if _crosses_pod(groups, pod_size):
+                    t.cross_pod_bytes += ring_b
+            if not fused and oc in _HBM_OPS and oc != "fusion":
+                t.hbm_bytes += op.result_bytes + sum(
+                    _shape_bytes(sym.get(o, "")) for o in _operands(op)
+                )
+        memo[key] = t
+        return t
+
+    return comp_totals(entry, False)
+
+
+def top_collectives(
+    text: str, *, n_devices: int, pod_size: int | None = None, k: int = 12
+) -> list[dict]:
+    """Rank collectives by trip-count-weighted ring bytes (for §Perf)."""
+    comps, entry = parse_module(text)
+    pod_size = pod_size or n_devices
+    rows: list[dict] = []
+
+    def walk(name: str, mult: float, seen: set):
+        if name in seen:
+            return
+        for op in comps.get(name, []):
+            oc = op.opcode
+            if oc == "while":
+                bm = re.search(r"body=%([\w\.\-]+)", op.rest)
+                if bm:
+                    walk(bm.group(1), mult * _trip_count(op, comps), seen)
+                continue
+            if oc in ("fusion", "call"):
+                cm = re.search(r"calls=%([\w\.\-]+)", op.rest)
+                if cm:
+                    walk(cm.group(1), mult, seen)
+                continue
+            if oc in _COLLECTIVES:
+                ops = comps[name]
+                scale = _source_dtype_scale(op, ops, comps)
+                groups = _replica_groups(op, n_devices)
+                gsize = _group_size(groups)
+                rb = op.result_bytes * scale
+                kind = oc.replace("-start", "")
+                if kind == "all-gather":
+                    ring = rb - rb / max(gsize, 1)
+                elif kind == "reduce-scatter":
+                    ring = rb * (gsize - 1)
+                elif kind == "all-reduce":
+                    ring = 2.0 * rb * (gsize - 1) / max(gsize, 1)
+                else:
+                    ring = rb * (gsize - 1) / max(gsize, 1) if gsize > 1 else rb
+                meta = re.search(r'op_name="([^"]+)"', op.rest)
+                rows.append(
+                    {
+                        "ring_bytes": ring * mult,
+                        "mult": mult,
+                        "kind": kind,
+                        "shape": op.type_str[:48],
+                        "cross_pod": _crosses_pod(groups, pod_size),
+                        "op_name": (meta.group(1) if meta else "")[-110:],
+                    }
+                )
+
+    walk(entry, 1.0, set())
+    rows.sort(key=lambda r: -r["ring_bytes"])
+    return rows[:k]

@@ -1,0 +1,4 @@
+"""Serving substrate: batched prefill + lockstep decode engine."""
+from repro.serve.engine import ServeConfig, ServeEngine
+
+__all__ = ["ServeConfig", "ServeEngine"]

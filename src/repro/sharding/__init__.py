@@ -1,0 +1,6 @@
+"""Sharding policies (DP/FSDP/TP/EP role resolution) and the optional
+GPipe pipeline-parallel schedule."""
+from repro.sharding.policies import ShardingPolicy, make_policy
+from repro.sharding.pipeline import bubble_fraction, gpipe
+
+__all__ = ["ShardingPolicy", "make_policy", "gpipe", "bubble_fraction"]

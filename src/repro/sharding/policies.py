@@ -1,0 +1,137 @@
+"""Sharding policies — how every tensor maps onto the production mesh.
+
+Axis roles (DESIGN.md §6):
+
+* ``pod``   — pure data parallelism between pods.  Parameters are
+  replicated across pods; the only cross-pod traffic is the per-step
+  gradient all-reduce, which the hierarchical schedule aggregates
+  (the paper's bridge pattern).  A hillclimb knob (``fsdp_over_pod``)
+  lets §Perf measure the flat alternative (FSDP spanning pods ⇒
+  per-layer cross-pod all-gathers).
+* ``data``  — batch parallelism + FSDP: parameters/optimizer state are
+  sharded over this axis and all-gathered per layer inside the scan.
+* ``model`` — tensor parallelism: MLP hidden, expert, vocab and
+  attention-sequence dims.
+
+Attention uses *sequence* sharding over ``model`` (context-parallel
+style) rather than head sharding so one rule covers every assigned
+arch (head counts 16–64 are not all divisible by 16); §Perf evaluates
+head-TP as an optimization where divisibility allows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingPolicy", "make_policy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Resolves logical dim roles to mesh axes (or no-ops without a mesh).
+
+    Roles: 'batch' (pod+data), 'fsdp' (data [+pod]), 'tp' (model),
+    'ep' (expert-parallel axes), None (replicated).
+    """
+
+    mesh: Mesh | None = None
+    batch_axes: tuple[str, ...] = ()
+    fsdp_axes: tuple[str, ...] = ()
+    tp_axis: str | None = None
+    ep_axes: tuple[str, ...] = ()
+    # attention head/seq reshard strategy (§Perf iteration B-1):
+    #   'a2a'    — project with natural head-dim sharding, then an
+    #              activation all-to-all into sequence sharding (weights
+    #              never gathered over tp) — default, ~16× cheaper
+    #   'gather' — constrain q to sequence sharding directly; XLA pulls
+    #              the FULL projection weights to every device (the
+    #              measured baseline pathology, kept for comparison)
+    attn_mode: str = "a2a"
+
+    def resolve(self, role: str | None):
+        if role is None:
+            return None
+        if role == "batch":
+            return self.batch_axes or None
+        if role == "batch_minus_ep":
+            # batch sharding on tensors that also carry an 'ep' dim —
+            # drop axes claimed by expert parallelism (a mesh axis may
+            # appear at most once per PartitionSpec)
+            axes = tuple(a for a in self.batch_axes if a not in self.ep_axes)
+            return axes or None
+        if role == "fsdp":
+            return self.fsdp_axes or None
+        if role == "tp":
+            return self.tp_axis
+        if role == "ep":
+            return self.ep_axes or None
+        raise ValueError(role)
+
+    def spec(self, *roles: str | None) -> P:
+        return P(*[self.resolve(r) for r in roles])
+
+    def shard(self, x: jax.Array, *roles: str | None) -> jax.Array:
+        """with_sharding_constraint when a mesh is attached, else no-op."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*roles))
+        )
+
+    def named(self, *roles: str | None) -> Any:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*roles))
+
+    def named_from_spec(self, spec: P) -> Any:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def make_policy(
+    mesh: Mesh | None,
+    *,
+    fsdp_over_pod: bool = False,
+    ep_over_pod: bool = False,
+    attn_mode: str = "a2a",
+) -> ShardingPolicy:
+    """Derive the policy from the mesh's axis names.
+
+    Meshes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+    multi-pod.  ``fsdp_over_pod`` / ``ep_over_pod`` are §Perf knobs that
+    extend FSDP / expert-parallel sharding across the pod boundary.
+    """
+    if mesh is None:
+        return ShardingPolicy()
+    names = tuple(mesh.axis_names)
+    has_pod = "pod" in names
+    batch = ("pod", "data") if has_pod else ("data",)
+    fsdp = ("pod", "data") if (has_pod and fsdp_over_pod) else ("data",)
+    ep = ("pod", "model") if (has_pod and ep_over_pod) else ("model",)
+    return ShardingPolicy(
+        mesh=mesh,
+        batch_axes=tuple(a for a in batch if a in names),
+        fsdp_axes=tuple(a for a in fsdp if a in names),
+        tp_axis="model" if "model" in names else None,
+        ep_axes=tuple(a for a in ep if a in names),
+        attn_mode=attn_mode,
+    )

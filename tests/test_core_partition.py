@@ -1,0 +1,134 @@
+"""Unit + property tests for the paper's Algorithm 1 and the graph layer."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    build_graph,
+    cut_traffic,
+    from_dense,
+    genetic_partition,
+    greedy_partition,
+    imbalance,
+    per_part_egress,
+    random_partition,
+    simulated_annealing_partition,
+)
+
+
+def _community_graph(m=96, comm=4, seed=0):
+    rng = np.random.default_rng(seed)
+    labels = np.repeat(np.arange(comm), m // comm)
+    src, dst, probs = [], [], []
+    for i in range(m):
+        for j in range(i + 1, m):
+            p = 0.4 if labels[i] == labels[j] else 0.02
+            if rng.random() < p:
+                src.append(i)
+                dst.append(j)
+                probs.append(rng.uniform(0.2, 1.0))
+    w = rng.uniform(0.5, 2.0, m)
+    return build_graph(src, dst, probs, w), labels
+
+
+class TestGraph:
+    def test_build_and_validate(self):
+        g, _ = _community_graph()
+        g.validate()
+        assert g.num_vertices == 96
+        assert g.num_edges > 0
+
+    def test_symmetric_storage(self):
+        g = build_graph([0, 1], [1, 2], [0.5, 0.7], np.ones(3))
+        n0, p0 = g.neighbors(0)
+        n1, _ = g.neighbors(1)
+        assert 1 in n0.tolist() and 0 in n1.tolist()
+
+    def test_from_dense_matches(self):
+        rng = np.random.default_rng(1)
+        p = np.triu(rng.random((8, 8)) < 0.5, 1) * rng.random((8, 8))
+        p = p + p.T
+        w = rng.uniform(1, 2, 8)
+        g = from_dense(p, w)
+        # edge_traffic sums to Σ P·Wi·Wj over all ordered pairs
+        expect = (p * w[:, None] * w[None, :]).sum()
+        assert np.isclose(g.edge_traffic().sum(), expect)
+
+    def test_self_loops_dropped(self):
+        g = build_graph([0, 1], [0, 2], [0.9, 0.5], np.ones(3))
+        nbrs, _ = g.neighbors(0)
+        assert 0 not in nbrs.tolist()
+
+    @given(
+        m=st.integers(4, 40),
+        n_edges=st.integers(0, 80),
+        seed=st.integers(0, 1000),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_build_graph_invariants(self, m, n_edges, seed):
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, m, n_edges)
+        dst = rng.integers(0, m, n_edges)
+        probs = rng.random(n_edges)
+        g = build_graph(src, dst, probs, rng.uniform(0.1, 3.0, m))
+        g.validate()
+        assert g.edge_traffic().min() >= 0 if g.num_edges else True
+
+
+class TestAlgorithm1:
+    def test_greedy_beats_random_and_ga(self):
+        g, _ = _community_graph()
+        cut_g = greedy_partition(g, 4).cut
+        cut_r = random_partition(g, 4, balanced=True).cut
+        cut_ga = genetic_partition(g, 4, generations=10).cut
+        assert cut_g < cut_r
+        assert cut_g <= cut_ga * 1.05
+
+    def test_recovers_communities(self):
+        g, labels = _community_graph()
+        res = greedy_partition(g, 4)
+        # every part should be dominated by one community
+        for p in range(4):
+            members = labels[res.assign == p]
+            if members.size:
+                dominant = np.bincount(members).max() / members.size
+                assert dominant > 0.6
+
+    def test_balance_constraint(self):
+        g, _ = _community_graph()
+        res = greedy_partition(g, 4, balance_slack=0.05)
+        assert imbalance(g, res.assign, 4) < 0.35
+
+    def test_history_keeps_best(self):
+        g, _ = _community_graph()
+        res = greedy_partition(g, 4, itermax=8)
+        assert res.cut <= res.history[0] + 1e-9
+
+    def test_egress_consistency(self):
+        g, _ = _community_graph()
+        res = greedy_partition(g, 4)
+        egress = per_part_egress(g, res.assign, 4)
+        # sum of per-part egress counts each cut edge twice (both ends)
+        assert np.isclose(egress.sum(), 2 * res.cut)
+
+    def test_degenerate_more_parts_than_vertices(self):
+        g = build_graph([0], [1], [0.5], np.ones(3))
+        res = greedy_partition(g, 8)
+        res.validate(g)
+
+    @given(seed=st.integers(0, 50), n_parts=st.sampled_from([2, 3, 4, 6]))
+    @settings(max_examples=15, deadline=None)
+    def test_valid_assignment_property(self, seed, n_parts):
+        g, _ = _community_graph(m=48, seed=seed)
+        for fn in (greedy_partition, random_partition):
+            res = fn(g, n_parts, seed=seed)
+            res.validate(g)
+            assert res.cut >= 0
+
+    def test_annealing_improves_on_start(self):
+        g, _ = _community_graph(m=48)
+        res = simulated_annealing_partition(g, 4, steps=1500)
+        start = random_partition(g, 4, balanced=True).cut
+        assert res.cut <= start * 1.1

@@ -1,0 +1,130 @@
+"""Unit + property tests for Algorithm 2 (two-level routing) and the
+analytic latency model."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ClusterModel,
+    connection_counts,
+    device_graph,
+    greedy_partition,
+    level1_egress,
+    level2_egress,
+    p2p_routing,
+    step_latency,
+    table2_row,
+    two_level_routing,
+)
+from repro.core.routing import group_pair_traffic
+
+
+def _device_traffic(n=64, comm=8, seed=0):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, comm, n)
+    base = rng.random((n, n)) * 0.2
+    boost = (labels[:, None] == labels[None, :]) * rng.random((n, n)) * 2.0
+    t = base + boost
+    t = (t + t.T) / 2
+    np.fill_diagonal(t, 0.0)
+    wg = rng.uniform(0.5, 2.0, n)
+    return t, wg
+
+
+class TestAlgorithm2:
+    def test_table_valid(self):
+        t, wg = _device_traffic()
+        tb = two_level_routing(t, wg, 8)
+        tb.validate()
+        assert tb.n_groups == 8
+
+    def test_share_sums_to_one(self):
+        t, wg = _device_traffic()
+        tb = two_level_routing(t, wg, 8)
+        gpt = group_pair_traffic(tb)
+        for gs in range(tb.n_groups):
+            members = tb.group_of == gs
+            for gd in range(tb.n_groups):
+                if gs == gd or gpt[gs, gd] == 0:
+                    continue
+                assert np.isclose(tb.share[members, gd].sum(), 1.0)
+
+    def test_route_paths(self):
+        t, wg = _device_traffic()
+        tb = two_level_routing(t, wg, 8)
+        same = np.nonzero(tb.group_of == tb.group_of[0])[0]
+        if same.size > 1:
+            assert tb.route(same[0], same[1]) == [same[0], same[1]]
+        other = np.nonzero(tb.group_of != tb.group_of[0])[0][0]
+        path = tb.route(0, int(other))
+        assert path[0] == 0 and path[-1] == other and len(path) <= 4
+
+    def test_connection_reduction(self):
+        t, wg = _device_traffic()
+        c_p2p = connection_counts(p2p_routing(t, wg))
+        c_two = connection_counts(two_level_routing(t, wg, 8))
+        assert c_two.mean() < c_p2p.mean()
+
+    def test_traffic_conservation(self):
+        """Total level-2 egress equals total inter-group traffic."""
+        t, wg = _device_traffic()
+        tb = two_level_routing(t, wg, 8)
+        cross = group_pair_traffic(tb).sum()
+        assert np.isclose(level2_egress(tb).sum(), cross, rtol=1e-6)
+
+    def test_level2_peak_balance(self):
+        """Bridge splitting keeps peak within a few x of the mean."""
+        t, wg = _device_traffic(n=96, comm=8)
+        tb = two_level_routing(t, wg, 8)
+        e2 = level2_egress(tb)
+        carriers = e2[e2 > 0]
+        assert carriers.max() <= 6 * carriers.mean()
+
+    def test_auto_group_sweep(self):
+        t, wg = _device_traffic(n=128)
+        tb = two_level_routing(t, wg, None)
+        tb.validate()
+        assert 2 <= tb.n_groups <= 16
+
+    @given(seed=st.integers(0, 30), g=st.sampled_from([4, 8, 16]))
+    @settings(max_examples=10, deadline=None)
+    def test_validity_property(self, seed, g):
+        t, wg = _device_traffic(seed=seed)
+        tb = two_level_routing(t, wg, g, seed=seed)
+        tb.validate()
+        assert (level2_egress(tb) >= 0).all()
+        assert (level1_egress(tb) >= 0).all()
+
+
+class TestLatencyModel:
+    def test_two_level_faster_when_congested(self):
+        t, wg = _device_traffic(n=96)
+        lat_p2p = step_latency(p2p_routing(t, wg)).t_total
+        lat_two = step_latency(two_level_routing(t, wg, 8)).t_total
+        assert lat_two < lat_p2p
+
+    def test_monotone_in_noise(self):
+        t, wg = _device_traffic()
+        row = table2_row(two_level_routing(t, wg, 8))
+        assert all(b >= a for a, b in zip(row, row[1:]))
+
+    def test_breakdown_positive(self):
+        t, wg = _device_traffic()
+        lb = step_latency(p2p_routing(t, wg))
+        assert lb.t_total > 0 and lb.t_compute > 0
+        assert lb.t_total >= lb.t_compute
+
+
+class TestDeviceGraph:
+    def test_aggregation(self, small_brain):
+        g = small_brain.graph
+        res = greedy_partition(g, 16)
+        t, wg = device_graph(g, res.assign, 16)
+        assert t.shape == (16, 16)
+        assert np.allclose(t, t.T)
+        assert np.allclose(np.diag(t), 0.0)
+        # total device traffic equals total cut traffic
+        assert np.isclose(t.sum() / 2, res.cut, rtol=1e-6)
+        assert np.isclose(wg.sum(), g.weights.sum())

@@ -1,0 +1,130 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref as R
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.spike_accum import spike_accum
+from repro.kernels.ssd_scan import ssd_scan
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,sk,d,causal,window",
+    [
+        (2, 4, 2, 256, 256, 64, True, None),
+        (1, 8, 1, 128, 128, 32, True, None),  # MQA
+        (2, 4, 4, 256, 256, 64, False, None),  # bidirectional MHA
+        (1, 4, 2, 256, 256, 64, True, 96),  # sliding window
+        (1, 2, 2, 384, 384, 16, True, 128),  # non-pow2 seq
+    ],
+)
+def test_flash_attention_sweep(b, hq, hkv, sq, sk, d, causal, window, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, sk, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, sk, d)), dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, block_q=128, block_k=128, interpret=True
+    )
+    ref = R.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d,ragged",
+    [(2, 4, 2, 1024, 64, False), (3, 8, 2, 512, 32, True), (1, 2, 1, 2048, 128, True)],
+)
+def test_decode_attention_sweep(b, hq, hkv, s, d, ragged, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, hq, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), dtype)
+    sl = jnp.asarray(RNG.integers(1, s + 1, size=b), jnp.int32) if ragged else None
+    out = decode_attention(q, k, v, seq_lens=sl, block_k=256, interpret=True)
+    ref = R.decode_attention_ref(q, k, v, seq_lens=sl)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize(
+    "bs,s,h,g,p,n,chunk",
+    [(2, 256, 4, 2, 32, 16, 64), (1, 128, 2, 1, 16, 8, 128), (1, 512, 8, 2, 64, 32, 128)],
+)
+def test_ssd_scan_sweep(bs, s, h, g, p, n, chunk):
+    x = jnp.asarray(RNG.normal(size=(bs, s, h, p)), jnp.float32)
+    a = jnp.asarray(RNG.uniform(0.85, 0.999, size=(bs, s, h)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(bs, s, g, n)), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(bs, s, g, n)), jnp.float32)
+    out = ssd_scan(x, a, b, c, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(R.ssd_ref(x, a, b, c)), rtol=3e-3, atol=3e-3
+    )
+
+
+def test_ssd_jnp_chunked_matches_ref():
+    from repro.kernels.ops import _ssd_chunked_jnp
+
+    x = jnp.asarray(RNG.normal(size=(2, 256, 4, 32)), jnp.float32)
+    a = jnp.asarray(RNG.uniform(0.85, 0.999, size=(2, 256, 4)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(2, 256, 2, 16)), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(2, 256, 2, 16)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(_ssd_chunked_jnp(x, a, b, c, chunk=64)),
+        np.asarray(R.ssd_ref(x, a, b, c)),
+        rtol=3e-3,
+        atol=3e-3,
+    )
+
+
+@pytest.mark.parametrize(
+    "bs,s,d,chunk,bd", [(2, 256, 128, 64, 64), (1, 128, 256, 128, 128), (3, 512, 64, 256, 64)]
+)
+def test_rglru_scan_sweep(bs, s, d, chunk, bd):
+    a = jnp.asarray(RNG.uniform(0.8, 0.999, size=(bs, s, d)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(bs, s, d)), jnp.float32)
+    out = rglru_scan(a, b, chunk=chunk, block_d=bd, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(R.rglru_ref(a, b)), rtol=3e-3, atol=3e-3
+    )
+
+
+@given(
+    m_blocks=st.integers(1, 6),
+    n_blocks=st.integers(1, 4),
+    rate=st.floats(0.0, 0.3),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=15, deadline=None)
+def test_spike_accum_property(m_blocks, n_blocks, rate, seed):
+    """Sparsity-skipping never changes the result — any firing pattern,
+    including all-zero (every block skipped) and dense."""
+    rng = np.random.default_rng(seed)
+    m, n = 128 * m_blocks, 128 * n_blocks
+    s = (rng.random(m) < rate).astype(np.float32)
+    w = rng.normal(size=(m, n)).astype(np.float32)
+    out = spike_accum(jnp.asarray(s), jnp.asarray(w), block_i=128, block_j=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), s @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_spike_accum_weighted_spikes():
+    rng = np.random.default_rng(3)
+    s = rng.random(256).astype(np.float32) * (rng.random(256) < 0.1)
+    w = rng.normal(size=(256, 128)).astype(np.float32)
+    out = spike_accum(jnp.asarray(s), jnp.asarray(w), block_i=128, block_j=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), s @ w, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,184 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill consistency."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import lm
+from repro.models.lm import lm_logits
+from repro.sharding.policies import ShardingPolicy
+
+POL = ShardingPolicy()
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b, s, key=jax.random.PRNGKey(1)):
+    if cfg.modality == "audio":
+        toks = jax.random.randint(key, (b, s + 1, cfg.n_codebooks), 0, cfg.vocab_size)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.modality == "vlm":
+        st = s - cfg.vision_tokens
+        toks = jax.random.randint(key, (b, st + 1), 0, cfg.vocab_size)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+            "vision_embed": jnp.zeros((b, cfg.vision_tokens, cfg.d_model), jnp.float32),
+        }
+    toks = jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_forward_loss(arch):
+    """One forward/loss step on CPU for every assigned architecture
+    (reduced, family-preserving config): finite loss, right shapes."""
+    cfg = ARCHS[arch].reduced()
+    params = lm.init_params(cfg, KEY)
+    batch = _batch(cfg, 2, 64)
+    loss = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg, POL))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    x = lm.embed_inputs(params, batch, cfg, POL)
+    assert x.shape == (2, 64, cfg.d_model)
+    h = lm.forward(params, x, cfg, POL)
+    assert h.shape == (2, 64, cfg.d_model)
+    assert not np.isnan(np.asarray(h, np.float32)).any()
+    logits = lm_logits(params, h, cfg, POL)
+    vp = lm.padded_vocab(cfg)
+    if cfg.modality == "audio":
+        assert logits.shape == (2, 64, cfg.n_codebooks, vp)
+    else:
+        assert logits.shape == (2, 64, vp)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_smoke_train_step(arch):
+    """One full train step (fwd+bwd+AdamW): finite loss and grads."""
+    from repro.train import TrainStepConfig, init_opt_state, make_train_step
+
+    cfg = ARCHS[arch].reduced()
+    params = lm.init_params(cfg, KEY)
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, POL, TrainStepConfig(n_microbatches=2)))
+    loss, params2, opt2, metrics = step(params, opt, _batch(cfg, 2, 64))
+    assert np.isfinite(float(loss)), arch
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    delta = sum(
+        float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).sum())
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["deepseek-7b", "mixtral-8x22b", "mamba2-1.3b", "recurrentgemma-9b", "qwen3-moe-30b-a3b"],
+)
+def test_decode_matches_forward(arch):
+    """prefill(S) + decode(token S) == forward(S+1) last logits."""
+    cfg = ARCHS[arch].reduced()
+    B, S = 2, 64
+    params = lm.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0, cfg.vocab_size)
+    x = lm.embed_inputs(params, {"tokens": toks}, cfg, POL)
+    h = lm.forward(params, x, cfg, POL)
+    ref = lm_logits(params, h[:, -1:], cfg, POL)[:, 0]
+    _, caches = jax.jit(lambda p, b: lm.prefill(p, b, cfg, POL, max_len=S + 1))(
+        params, {"tokens": toks[:, :S]}
+    )
+    out, _ = jax.jit(lambda p, c, b, pos: lm.decode_step(p, c, b, pos, cfg, POL))(
+        params, caches, {"tokens": toks[:, S : S + 1]}, jnp.int32(S)
+    )
+    err = np.abs(
+        np.asarray(out, np.float32)[:, : cfg.vocab_size]
+        - np.asarray(ref, np.float32)[:, : cfg.vocab_size]
+    ).max()
+    assert err < 0.05, f"{arch}: {err}"
+
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "qwen3-moe-30b-a3b"])
+def test_multistep_decode_matches_forward(arch):
+    """Decode SEVERAL tokens past the prompt (regression: cache writes
+    past the prefill length were silent no-ops before max_len existed)."""
+    cfg = ARCHS[arch].reduced()
+    B, S, extra = 1, 32, 6
+    params = lm.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S + extra), 0, cfg.vocab_size)
+    _, caches = jax.jit(lambda p, b: lm.prefill(p, b, cfg, POL, max_len=S + extra))(
+        params, {"tokens": toks[:, :S]}
+    )
+    dec = jax.jit(lambda p, c, b, pos: lm.decode_step(p, c, b, pos, cfg, POL))
+    for i in range(extra):
+        logits, caches = dec(
+            params, caches, {"tokens": toks[:, S + i : S + i + 1]}, jnp.int32(S + i)
+        )
+    x = lm.embed_inputs(params, {"tokens": toks}, cfg, POL)
+    h = lm.forward(params, x, cfg, POL)
+    ref = lm_logits(params, h[:, -1:], cfg, POL)[:, 0]
+    err = np.abs(
+        np.asarray(logits, np.float32)[:, : cfg.vocab_size]
+        - np.asarray(ref, np.float32)[:, : cfg.vocab_size]
+    ).max()
+    assert err < 0.02, f"{arch}: {err}"
+
+def test_swa_ring_buffer_beyond_window():
+    """Decode past the SWA window stays consistent with full forward."""
+    cfg = ARCHS["mixtral-8x22b"].reduced()  # window 64 after reduction
+    B, S = 1, 64  # prefill exactly one window
+    extra = 8
+    params = lm.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + extra), 0, cfg.vocab_size)
+    _, caches = jax.jit(lambda p, b: lm.prefill(p, b, cfg, POL, max_len=S + extra))(
+        params, {"tokens": toks[:, :S]}
+    )
+    dec = jax.jit(lambda p, c, b, pos: lm.decode_step(p, c, b, pos, cfg, POL))
+    for i in range(extra):
+        logits, caches = dec(
+            params, caches, {"tokens": toks[:, S + i : S + i + 1]}, jnp.int32(S + i)
+        )
+    # reference: full forward over all S+extra tokens
+    x = lm.embed_inputs(params, {"tokens": toks}, cfg, POL)
+    h = lm.forward(params, x, cfg, POL)
+    ref = lm_logits(params, h[:, -1:], cfg, POL)[:, 0]
+    err = np.abs(
+        np.asarray(logits, np.float32)[:, : cfg.vocab_size]
+        - np.asarray(ref, np.float32)[:, : cfg.vocab_size]
+    ).max()
+    assert err < 0.05, err
+
+
+def test_segments_cover_pattern():
+    """Segment grouping is a partition of the layer pattern."""
+    for arch, cfg in ARCHS.items():
+        rebuilt = []
+        for unit, r in lm.segments(cfg):
+            rebuilt.extend(list(unit) * r)
+        assert tuple(rebuilt) == cfg.layer_pattern, arch
+
+
+def test_param_counts_match_published():
+    """Analytic parameter counts land near the models' advertised sizes."""
+    expected = {
+        "qwen3-moe-30b-a3b": 30.5e9,
+        "mixtral-8x22b": 141e9,
+        "yi-34b": 34.4e9,
+        "phi4-mini-3.8b": 3.8e9,
+        "qwen2.5-14b": 14.8e9,
+        "deepseek-7b": 6.9e9,
+        "llava-next-mistral-7b": 7.2e9,
+        "mamba2-1.3b": 1.4e9,
+        "recurrentgemma-9b": 9.6e9,
+        "musicgen-large": 3.3e9,
+    }
+    for arch, want in expected.items():
+        got = ARCHS[arch].param_count()
+        assert abs(got - want) / want < 0.12, f"{arch}: {got/1e9:.2f}B vs {want/1e9:.2f}B"
+
+
+def test_moe_active_params():
+    cfg = ARCHS["qwen3-moe-30b-a3b"]
+    assert cfg.active_param_count() < 0.15 * cfg.param_count()

@@ -1,0 +1,103 @@
+"""MoE layer correctness: capacity-based dispatch vs a dense-expert
+oracle, load-balance behavior, and the iterative top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.models import lm
+from repro.models.layers import _topk_iterative, moe_block
+from repro.sharding.policies import ShardingPolicy
+
+POL = ShardingPolicy()
+
+
+def _dense_moe_oracle(x, p, cfg, k):
+    """Route every token to its top-k experts with NO capacity limit:
+    y = Σ_e gate_e(x) · expert_e(x) over the selected experts."""
+    b, s, d = x.shape
+    e = cfg.n_experts
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, k)
+    gate_w = gate_w / jnp.clip(gate_w.sum(-1, keepdims=True), 1e-9)
+    xf = x.astype(jnp.float32)
+    # compute ALL experts densely (test scale), then select
+    h = jnp.einsum("bsd,edf->bsef", xf, p["w_in"].astype(jnp.float32))
+    g = jnp.einsum("bsd,edf->bsef", xf, p["w_gate"].astype(jnp.float32))
+    a = jax.nn.silu(g) * h
+    y_all = jnp.einsum("bsef,efd->bsed", a, p["w_out"].astype(jnp.float32))
+    sel = jax.nn.one_hot(gate_i, e)  # [B,S,k,E]
+    w = jnp.einsum("bske,bsk->bse", sel, gate_w)
+    return jnp.einsum("bse,bsed->bsd", w, y_all)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_capacity_dispatch_matches_dense_oracle(seed):
+    """With ample capacity no token drops, so the einsum-dispatch MoE
+    must equal the dense oracle."""
+    cfg = ARCHS["qwen3-moe-30b-a3b"].reduced()  # 8 experts top-2
+    key = jax.random.PRNGKey(seed)
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * 0.1,
+        "w_in": jax.random.normal(ks[1], (e, d, f), jnp.bfloat16) * 0.05,
+        "w_gate": jax.random.normal(ks[2], (e, d, f), jnp.bfloat16) * 0.05,
+        "w_out": jax.random.normal(ks[3], (e, f, d), jnp.bfloat16) * 0.05,
+    }
+    x = jax.random.normal(ks[4], (2, 32, d), jnp.bfloat16)
+    got = moe_block(x, p, cfg, POL, capacity_factor=8.0)  # ample capacity
+    want = _dense_moe_oracle(x, p, cfg, cfg.top_k)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=0.1, atol=0.02
+    )
+
+
+def test_capacity_drops_are_bounded():
+    """With tight capacity the output stays finite and tokens degrade
+    gracefully (dropped tokens contribute zero, not garbage)."""
+    cfg = ARCHS["qwen3-moe-30b-a3b"].reduced()
+    key = jax.random.PRNGKey(3)
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * 5.0,  # skewed
+        "w_in": jax.random.normal(ks[1], (e, d, f), jnp.bfloat16) * 0.05,
+        "w_gate": jax.random.normal(ks[2], (e, d, f), jnp.bfloat16) * 0.05,
+        "w_out": jax.random.normal(ks[3], (e, f, d), jnp.bfloat16) * 0.05,
+    }
+    x = jax.random.normal(ks[4], (1, 64, d), jnp.bfloat16)
+    y = moe_block(x, p, cfg, POL, capacity_factor=0.25)
+    arr = np.asarray(y, np.float32)
+    assert np.isfinite(arr).all()
+    # at least some tokens routed (not all dropped)
+    assert np.abs(arr).sum() > 0
+
+
+@given(seed=st.integers(0, 200), k=st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=25, deadline=None)
+def test_topk_iterative_matches_lax(seed, k):
+    rng = np.random.default_rng(seed)
+    # distinct values so ties cannot reorder
+    x = jnp.asarray(rng.permutation(64).reshape(1, 4, 16).astype(np.float32))
+    vw, vi = _topk_iterative(x, k)
+    lw, li = jax.lax.top_k(x, k)
+    np.testing.assert_array_equal(np.asarray(vi), np.asarray(li))
+    np.testing.assert_allclose(np.asarray(vw), np.asarray(lw))
+
+
+def test_mixtral_tp_mode_selected():
+    """8 experts on a 16-wide tp axis must use TP-expert mode (the EP
+    path needs n_experts % tp == 0) — verified via spec roles."""
+    cfg = ARCHS["mixtral-8x22b"]
+    defs = lm.param_defs(cfg)
+    w_in = defs["seg0"]["mlp0"]["w_in"]
+    assert "ep" not in w_in.roles  # TP mode
+    cfg2 = ARCHS["qwen3-moe-30b-a3b"]
+    w_in2 = lm.param_defs(cfg2)["seg0"]["mlp0"]["w_in"]
+    assert "ep" in w_in2.roles  # EP mode

@@ -1,0 +1,144 @@
+"""SNN substrate tests: generator, dynamics, engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.snn import (
+    IzhikevichParams,
+    LIFParams,
+    SNNEngine,
+    expand_synapses,
+    generate_brain_model,
+    init_state,
+    izhikevich_step,
+    lif_step,
+)
+
+
+class TestBrainModel:
+    def test_generation_deterministic(self):
+        a = generate_brain_model(n_populations=128, n_regions=8, total_neurons=10**6, seed=3)
+        b = generate_brain_model(n_populations=128, n_regions=8, total_neurons=10**6, seed=3)
+        assert np.array_equal(a.graph.indices, b.graph.indices)
+        assert np.array_equal(a.neuron_counts, b.neuron_counts)
+
+    def test_scales_to_10b_neurons(self):
+        bm = generate_brain_model(n_populations=512, n_regions=32, total_neurons=10_000_000_000)
+        assert abs(bm.total_neurons - 10_000_000_000) / 1e10 < 0.01
+        bm.graph.validate()
+
+    def test_region_structure(self, small_brain):
+        g = small_brain.graph
+        rows = g.rows()
+        same_region = small_brain.region_of[rows] == small_brain.region_of[g.indices]
+        # intra-region connectivity dominates (community structure)
+        assert same_region.mean() > 0.3
+
+    def test_uneven_weights(self, small_brain):
+        w = small_brain.graph.weights
+        assert w.max() / w.mean() > 3  # heavy-tailed (paper guideline #3)
+
+
+class TestDynamics:
+    def test_lif_fires_and_resets(self):
+        p = LIFParams()
+        st_ = init_state(4, p, jax.random.PRNGKey(0))
+        spikes_seen = jnp.zeros(4)
+        s = st_
+        for _ in range(600):
+            s, spk = lif_step(s, jnp.full((4,), 3.0), p)
+            spikes_seen = spikes_seen + spk
+        assert float(spikes_seen.min()) > 0  # all neurons fired
+        assert float(s.v.max()) < p.v_thresh + 1e-3
+
+    def test_lif_refractory(self):
+        p = LIFParams(t_refrac=5.0)
+        s = init_state(1, p, jax.random.PRNGKey(0))
+        s = s._replace(v=jnp.array([p.v_thresh + 1.0]))
+        s, spk = lif_step(s, jnp.zeros(1), p)
+        assert float(spk[0]) == 1.0
+        s, spk2 = lif_step(s, jnp.full((1,), 100.0), p)
+        assert float(spk2[0]) == 0.0  # refractory blocks immediate refire
+
+    def test_izhikevich_spikes(self):
+        p = IzhikevichParams()
+        s = init_state(2, p, jax.random.PRNGKey(0))
+        total = 0.0
+        for _ in range(400):
+            s, spk = izhikevich_step(s, jnp.full((2,), 10.0), p)
+            total += float(spk.sum())
+        assert total > 0
+
+    @given(drive=st.floats(0.5, 5.0))
+    @settings(max_examples=8, deadline=None)
+    def test_rate_monotone_in_drive(self, drive):
+        p = LIFParams()
+        eng = SNNEngine(w_syn=jnp.zeros((8, 8)), params=p, i_ext=drive)
+        low = eng.run(400, key=jax.random.PRNGKey(1)).rates.mean()
+        eng2 = SNNEngine(w_syn=jnp.zeros((8, 8)), params=p, i_ext=drive + 1.0)
+        high = eng2.run(400, key=jax.random.PRNGKey(1)).rates.mean()
+        assert float(high) >= float(low)
+
+
+class TestEngine:
+    def test_expand_synapses_dale(self, small_brain):
+        w, pop_of = expand_synapses(small_brain.graph, 2, seed=0)
+        m = w.shape[0]
+        assert w.shape == (m, m)
+        assert np.allclose(np.diag(w), 0.0)
+        # Dale's law: each neuron's outgoing weights share a sign
+        for i in range(m):
+            row = w[i][w[i] != 0]
+            if row.size:
+                assert (row > 0).all() or (row < 0).all()
+
+    def test_engine_with_kernel_current(self):
+        """The Pallas spike_accum kernel slots in as the current hook."""
+        from repro.kernels import spike_currents, KernelPolicy
+
+        rng = np.random.default_rng(0)
+        w = (rng.random((128, 128)) < 0.1).astype(np.float32)
+        np.fill_diagonal(w, 0)
+        pol = KernelPolicy(use_pallas=True, interpret=True)
+        eng = SNNEngine(w_syn=jnp.asarray(w), params=LIFParams(), i_ext=3.0)
+        ref = eng.run(30, key=jax.random.PRNGKey(5))
+        eng2 = SNNEngine(w_syn=jnp.asarray(w), params=LIFParams(), i_ext=3.0)
+        out = eng2.run(
+            30,
+            key=jax.random.PRNGKey(5),
+            current_fn=lambda s, wm: spike_currents(s, wm, policy=pol),
+        )
+        np.testing.assert_allclose(np.asarray(ref.spikes), np.asarray(out.spikes))
+
+
+class TestDistributed:
+    def test_distributed_matches_reference(self, run_code=None):
+        from tests.conftest import run_devices
+
+        code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.snn import SNNEngine, DistributedSNN, LIFParams
+from repro.snn.distributed import partition_permutation
+rng = np.random.default_rng(2)
+m = 64
+w = (rng.random((m, m)) < 0.2).astype(np.float32) * rng.gamma(2., 2., (m, m)).astype(np.float32)
+np.fill_diagonal(w, 0)
+params = LIFParams(noise_sigma=0.0)
+ref = SNNEngine(w_syn=jnp.asarray(w), params=params, i_ext=4.0).run(60, key=jax.random.PRNGKey(7))
+mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+assign = np.repeat(np.arange(8), m // 8)
+perm = partition_permutation(assign, 8)
+wp = w[np.ix_(perm, perm)]
+ref_p = np.asarray(ref.spikes)[:, perm]
+for exch in ("flat", "two_level"):
+    d = DistributedSNN(mesh=mesh, w_syn=jnp.asarray(wp), params=params, exchange=exch, i_ext=4.0)
+    raster = np.asarray(d.run(60, key=jax.random.PRNGKey(7)))
+    np.testing.assert_allclose(raster, ref_p)
+print("OK")
+"""
+        out = run_devices(code)
+        assert "OK" in out

@@ -1,0 +1,111 @@
+"""End-to-end behaviour tests: train → checkpoint → restart → serve,
+plus a real dry-run cell executed through the actual CLI entry point."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.data import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.serve import ServeConfig, ServeEngine
+from repro.sharding.policies import ShardingPolicy
+from repro.train import (
+    AdamWConfig,
+    Supervisor,
+    SupervisorConfig,
+    TrainStepConfig,
+    init_opt_state,
+    make_train_step,
+)
+
+
+def test_train_checkpoint_restart_serve(tmp_path):
+    """The full lifecycle on a tiny model: supervised training with an
+    injected mid-run failure, rollback, completion, then serving from
+    the trained weights."""
+    cfg = ARCHS["deepseek-7b"].reduced()
+    pol = ShardingPolicy()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    data = SyntheticLM(cfg, DataConfig(seq_len=64, global_batch=4))
+    step = jax.jit(
+        make_train_step(
+            cfg,
+            pol,
+            TrainStepConfig(
+                n_microbatches=2, adamw=AdamWConfig(warmup_steps=2, total_steps=40)
+            ),
+        )
+    )
+    blown = {"done": False}
+
+    def bomb(s):
+        if s == 5 and not blown["done"]:
+            blown["done"] = True
+            raise RuntimeError("injected preemption")
+
+    sup = Supervisor(
+        step,
+        params,
+        opt,
+        lambda s: jax.tree.map(jnp.asarray, data(s)),
+        SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=3),
+        failure_hook=bomb,
+    )
+    hist = sup.run(12)
+    # history counts attempts: rollback replays checkpointed steps
+    assert len(hist) >= 12 and hist[-1].step == 12
+    assert any(h.restarted for h in hist)
+    assert hist[-1].loss < hist[0].loss + 0.5  # training proceeded sanely
+
+    eng = ServeEngine(cfg, sup.params, pol, ServeConfig(batch_slots=2))
+    outs = eng.generate([[1, 2, 3], [7, 8]], max_new_tokens=4)
+    assert len(outs) == 2 and all(len(o) == 4 for o in outs)
+
+
+@pytest.mark.slow
+def test_dryrun_cli_cell(tmp_path):
+    """The actual dry-run entry point compiles a production-mesh cell
+    (512 fake devices) and emits a well-formed record."""
+    out_path = tmp_path / "dr.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "mamba2-1.3b", "--shape", "decode_32k",
+            "--mesh", "single", "--out", str(out_path),
+        ],
+        capture_output=True, text=True, timeout=560, env=env, cwd="/root/repo",
+    )
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    rec = json.loads(out_path.read_text().strip().splitlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert rec["hlo"]["flops_per_chip"] > 0
+    assert rec["memory"]["fits_16g"]
+
+
+def test_production_mesh_shapes():
+    """Mesh factory invariants (checked in a subprocess against 512
+    fake devices so the main test process keeps 1 CPU device)."""
+    from tests.conftest import run_devices
+
+    code = """
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+assert m1.shape == {"data": 16, "model": 16}, m1.shape
+m2 = make_production_mesh(multi_pod=True)
+assert m2.shape == {"pod": 2, "data": 16, "model": 16}, m2.shape
+assert m2.devices.size == 512
+print("OK")
+"""
+    assert "OK" in run_devices(code, n_devices=512)
