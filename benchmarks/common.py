@@ -17,6 +17,7 @@ from repro.core import (
     device_graph,
     genetic_partition,
     greedy_partition,
+    multilevel_partition,
     random_partition,
 )
 from repro.snn import generate_brain_model
@@ -33,9 +34,18 @@ class PaperScale:
     seed: int = 0
 
 
-def build_setup(scale: PaperScale):
+PARTITIONERS = {
+    "greedy": lambda g, n, seed: greedy_partition(g, n, itermax=6, seed=seed),
+    "multilevel": lambda g, n, seed: multilevel_partition(g, n, seed=seed),
+}
+
+
+def build_setup(scale: PaperScale, *, method: str = "greedy"):
     """Generate the brain model and the three partitions the paper
-    compares (random / GA / Algorithm 1)."""
+    compares: random / GA / the proposed partitioner (Algorithm 1
+    ``greedy`` or the multilevel scheme, selectable via ``method``)."""
+    if method not in PARTITIONERS:
+        raise ValueError(f"unknown partition method {method!r}")
     bm = generate_brain_model(
         n_populations=scale.n_populations,
         n_regions=90,
@@ -49,7 +59,7 @@ def build_setup(scale: PaperScale):
         "ga": genetic_partition(
             g, scale.n_devices, pop_size=12, generations=8, seed=scale.seed
         ),
-        "greedy": greedy_partition(g, scale.n_devices, itermax=6, seed=scale.seed),
+        "proposed": PARTITIONERS[method](g, scale.n_devices, scale.seed),
     }
     return bm, parts
 

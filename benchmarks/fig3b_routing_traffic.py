@@ -13,9 +13,9 @@ from repro.core import device_graph, level2_egress, p2p_routing, two_level_routi
 from benchmarks.common import PaperScale, build_setup, emit
 
 
-def run(scale: PaperScale):
-    bm, parts = build_setup(scale)
-    t, wg = device_graph(bm.graph, parts["greedy"].assign, scale.n_devices)
+def run(scale: PaperScale, *, method: str = "greedy"):
+    bm, parts = build_setup(scale, method=method)
+    t, wg = device_graph(bm.graph, parts["proposed"].assign, scale.n_devices)
     greedy = two_level_routing(t, wg, scale.n_groups, grouping="greedy")
     routing = {
         "p2p": p2p_routing(t, wg),
@@ -31,12 +31,16 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=2000)
     ap.add_argument("--populations", type=int, default=20_000)
     ap.add_argument("--groups", type=int, default=0)
+    ap.add_argument(
+        "--method", choices=["greedy", "multilevel"], default="greedy",
+        help="partitioner feeding the device graph",
+    )
     args = ap.parse_args(argv)
     scale = PaperScale(
         n_devices=args.devices, n_populations=args.populations,
         n_groups=args.groups or None
     )
-    egress, _ = run(scale)
+    egress, _ = run(scale, method=args.method)
     # peaks over devices that actually carry level-2 traffic
     peaks = {k: float(v.max()) for k, v in egress.items()}
     vs_p2p = 100.0 * (1 - peaks["greedy"] / peaks["p2p"])

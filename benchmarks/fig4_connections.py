@@ -13,9 +13,9 @@ from repro.core import connection_counts, device_graph, p2p_routing, two_level_r
 from benchmarks.common import PaperScale, build_setup, emit
 
 
-def run(scale: PaperScale):
-    bm, parts = build_setup(scale)
-    t, wg = device_graph(bm.graph, parts["greedy"].assign, scale.n_devices)
+def run(scale: PaperScale, *, method: str = "greedy"):
+    bm, parts = build_setup(scale, method=method)
+    t, wg = device_graph(bm.graph, parts["proposed"].assign, scale.n_devices)
     p2p = p2p_routing(t, wg)
     two = two_level_routing(t, wg, scale.n_groups, grouping="greedy")
     return connection_counts(p2p), connection_counts(two)
@@ -26,12 +26,16 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=2000)
     ap.add_argument("--populations", type=int, default=20_000)
     ap.add_argument("--groups", type=int, default=0)
+    ap.add_argument(
+        "--method", choices=["greedy", "multilevel"], default="greedy",
+        help="partitioner feeding the device graph",
+    )
     args = ap.parse_args(argv)
     scale = PaperScale(
         n_devices=args.devices, n_populations=args.populations,
         n_groups=args.groups or None
     )
-    c_p2p, c_two = run(scale)
+    c_p2p, c_two = run(scale, method=args.method)
     emit("fig4/mean_connections_p2p", round(float(c_p2p.mean()), 1), "paper: 1552")
     emit("fig4/mean_connections_two_level", round(float(c_two.mean()), 1), "paper: 88")
     emit(

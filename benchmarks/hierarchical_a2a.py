@@ -24,8 +24,8 @@ import time
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.hierarchical import make_exchange_fns
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("pod", "data"))
 n_dev, chunk, d = 8, 64, 256
 x = jnp.arange(n_dev * n_dev * chunk * d, dtype=jnp.float32).reshape(
     n_dev, n_dev, chunk, d)

@@ -18,12 +18,19 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--skip-exec", action="store_true", help="skip subprocess benches")
+    ap.add_argument(
+        "--method",
+        choices=["greedy", "multilevel"],
+        default="greedy",
+        help="partitioner for the proposed rows/lines",
+    )
     args = ap.parse_args(argv)
 
     if args.full:
         size = ["--devices", "2000", "--populations", "20000"]
     else:
         size = ["--devices", "500", "--populations", "6000"]
+    size += ["--method", args.method]
 
     from benchmarks import (
         fig3a_partition_traffic,

@@ -30,6 +30,7 @@ import numpy as np
 from repro.core import (
     device_graph,
     greedy_partition,
+    multilevel_partition,
     step_latency,
     p2p_routing,
     two_level_routing,
@@ -42,14 +43,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--neurons-per-pop", type=int, default=4)
+    ap.add_argument(
+        "--method",
+        choices=["greedy", "multilevel"],
+        default="greedy",
+        help="partitioner: Algorithm 1 greedy or the multilevel scheme",
+    )
     args = ap.parse_args()
     n_dev = 8
 
-    print("=== model + partition (Algorithm 1) ===")
+    print(f"=== model + partition (Algorithm 1, method={args.method}) ===")
     bm = generate_brain_model(
         n_populations=128, n_regions=8, total_neurons=1_000_000, seed=0
     )
-    part = greedy_partition(bm.graph, n_dev)
+    partition_fn = greedy_partition if args.method == "greedy" else multilevel_partition
+    part = partition_fn(bm.graph, n_dev)
     print(f"populations={bm.n_populations} devices={n_dev} cut={part.cut:.1f} "
           f"loads={np.round(part.loads, 1)}")
 
@@ -74,9 +82,9 @@ def main():
     perm = partition_permutation(n_assign_eq, n_dev)
     wp = w[np.ix_(perm, perm)].astype(np.float32) * 0.05
 
-    mesh = jax.make_mesh(
-        (2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((2, 4), ("pod", "data"))
     rasters = {}
     for exchange in ("flat", "two_level"):
         eng = DistributedSNN(

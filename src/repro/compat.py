@@ -1,0 +1,77 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The codebase targets the modern spelling (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``) but must run on
+older releases (e.g. jax 0.4.x) where ``shard_map`` lives in
+``jax.experimental.shard_map`` under the ``check_rep`` keyword and
+``Mesh`` has no axis types.  Import ``shard_map`` / ``make_mesh`` from
+here instead of from ``jax`` directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "pallas_tpu_compiler_params"]
+
+try:  # jax >= 0.6: public API, replication check renamed to check_vma
+    from jax import shard_map as _shard_map
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(
+    f=None,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    check_vma: bool | None = None,
+    check_rep: bool | None = None,
+    **kwargs: Any,
+):
+    """``jax.shard_map`` accepting either replication-check spelling.
+
+    Usable as a direct call, a decorator, or via ``functools.partial``
+    (``f`` may be omitted to get a single-argument transform).
+    """
+    check = check_vma if check_vma is not None else check_rep
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+    if check is not None:
+        kw[_CHECK_KW] = check
+    if f is None:
+        return functools.partial(_shard_map, **kw)
+    return _shard_map(f, **kw)
+
+
+def pallas_tpu_compiler_params(**kwargs: Any):
+    """Build TPU pallas compiler params under either class name.
+
+    jax >= 0.6 spells it ``pltpu.CompilerParams``; 0.4.x/0.5.x used
+    ``pltpu.TPUCompilerParams``.  Imported lazily so merely importing this
+    module never pulls in the pallas TPU backend.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs: Any):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None and "axis_types" not in kwargs:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axis_names)
+    try:
+        return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+    except TypeError:
+        kwargs.pop("axis_types", None)
+        return jax.make_mesh(axis_shapes, axis_names, **kwargs)

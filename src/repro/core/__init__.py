@@ -1,7 +1,15 @@
 """Paper core: partitioning (Alg. 1), two-level routing (Alg. 2), the
 analytic cluster latency model, hierarchical TPU collective schedules,
 and the MoE expert-placement adapter."""
-from repro.core.graph import CommGraph, build_graph, from_dense, symmetrize
+from repro.core.graph import (
+    CommGraph,
+    build_graph,
+    from_dense,
+    planted_partition_graph,
+    symmetrize,
+    watts_strogatz_graph,
+)
+from repro.core.multilevel import multilevel_partition
 from repro.core.partition import (
     PartitionResult,
     cut_traffic,
@@ -10,6 +18,7 @@ from repro.core.partition import (
     imbalance,
     per_part_egress,
     random_partition,
+    refine_partition,
     simulated_annealing_partition,
 )
 from repro.core.routing import (
@@ -34,12 +43,16 @@ __all__ = [
     "build_graph",
     "from_dense",
     "symmetrize",
+    "watts_strogatz_graph",
+    "planted_partition_graph",
     "PartitionResult",
     "cut_traffic",
     "greedy_partition",
+    "multilevel_partition",
     "random_partition",
     "genetic_partition",
     "simulated_annealing_partition",
+    "refine_partition",
     "imbalance",
     "per_part_egress",
     "RoutingTable",

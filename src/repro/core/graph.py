@@ -26,6 +26,8 @@ __all__ = [
     "build_graph",
     "from_dense",
     "symmetrize",
+    "watts_strogatz_graph",
+    "planted_partition_graph",
 ]
 
 
@@ -150,3 +152,68 @@ def symmetrize(g: CommGraph) -> CommGraph:
     """Return a symmetrized copy of ``g`` (max of the two directions)."""
     rows = g.rows()
     return build_graph(rows, g.indices, g.probs, g.weights, sym=True)
+
+
+# ---------------------------------------------------------------------------
+# Sparse test/benchmark graph families (fully vectorized COO construction,
+# usable at M >= 100k — no Python per-edge loops)
+# ---------------------------------------------------------------------------
+
+
+def watts_strogatz_graph(
+    m: int, k: int = 8, beta: float = 0.1, *, seed: int = 0
+) -> CommGraph:
+    """Watts–Strogatz small-world graph as a :class:`CommGraph`.
+
+    Ring lattice of ``m`` vertices each wired to its ``k`` nearest
+    neighbors (``k`` even), with every edge rewired to a random endpoint
+    with probability ``beta``.  Edge probs and vertex weights are drawn
+    uniformly so traffic is non-degenerate.
+    """
+    if k % 2 or k <= 0:
+        raise ValueError("k must be positive and even")
+    rng = np.random.default_rng(seed)
+    src = np.repeat(np.arange(m, dtype=np.int64), k // 2)
+    offs = np.tile(np.arange(1, k // 2 + 1, dtype=np.int64), m)
+    dst = (src + offs) % m
+    rewire = rng.random(dst.shape[0]) < beta
+    dst = np.where(rewire, rng.integers(0, m, dst.shape[0]), dst)
+    probs = rng.uniform(0.1, 1.0, dst.shape[0])
+    weights = rng.uniform(0.5, 2.0, m)
+    return build_graph(src, dst, probs, weights)
+
+
+def planted_partition_graph(
+    m: int,
+    n_blocks: int = 8,
+    *,
+    avg_degree: float = 16.0,
+    p_in_frac: float = 0.8,
+    seed: int = 0,
+) -> tuple[CommGraph, np.ndarray]:
+    """Planted-partition (stochastic block) graph + ground-truth labels.
+
+    Samples ``m * avg_degree / 2`` undirected edges; a ``p_in_frac``
+    fraction is drawn inside blocks (both endpoints in the same block),
+    the rest between uniformly random endpoints, yielding strong
+    community structure at any scale without materializing ``P[M, M]``.
+    """
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_blocks, m)
+    n_edges = int(m * avg_degree / 2)
+    n_in = int(n_edges * p_in_frac)
+    # Intra-block edges: pick a random vertex, then a random peer of the
+    # same block via a block-sorted lookup table.
+    order = np.argsort(labels, kind="stable")
+    block_start = np.searchsorted(labels[order], np.arange(n_blocks))
+    block_count = np.bincount(labels, minlength=n_blocks)
+    src_in = rng.integers(0, m, n_in)
+    b = labels[src_in]
+    dst_in = order[block_start[b] + rng.integers(0, np.maximum(block_count[b], 1))]
+    src_out = rng.integers(0, m, n_edges - n_in)
+    dst_out = rng.integers(0, m, n_edges - n_in)
+    src = np.concatenate([src_in, src_out])
+    dst = np.concatenate([dst_in, dst_out])
+    probs = rng.uniform(0.1, 1.0, src.shape[0])
+    weights = rng.uniform(0.5, 2.0, m)
+    return build_graph(src, dst, probs, weights), labels

@@ -40,6 +40,9 @@ __all__ = [
     "genetic_partition",
     "simulated_annealing_partition",
     "refine_partition",
+    "refine_sweep_csr",
+    "refine_sweep_csr_seq",
+    "rebalance_csr",
 ]
 
 
@@ -192,9 +195,21 @@ def greedy_partition(
             gm[u] = gain
             heapq.heappush(hp, (-gain, u))
 
+    # Weight-descending order shared by seeding and the empty-frontier
+    # fallback: a cursor walks it once over the whole run, so restarting a
+    # region never rescans the assignment (keeps large sparse M linear).
+    by_weight = np.argsort(-w, kind="stable")
+    fallback_pos = 0
+
+    def _next_unassigned() -> int:
+        nonlocal fallback_pos
+        while fallback_pos < m and assign[by_weight[fallback_pos]] != -1:
+            fallback_pos += 1
+        return int(by_weight[fallback_pos]) if fallback_pos < m else -1
+
     # Seed each part with a heavy vertex, spread by shuffling the top-2N
     # heaviest so that re-runs with different seeds explore different fronts.
-    heavy = np.argsort(-w)[: min(m, 2 * n)]
+    heavy = by_weight[: min(m, 2 * n)].copy()
     rng.shuffle(heavy)
     for p, v in enumerate(heavy[:n]):
         _absorb(int(v), p)
@@ -223,11 +238,10 @@ def greedy_partition(
                 break
             if v == -1:
                 # Empty frontier: start a new region at the heaviest
-                # unassigned vertex (keeps the sweep linear).
-                rem = np.nonzero(assign == -1)[0]
-                if rem.size == 0:
+                # unassigned vertex.
+                v = _next_unassigned()
+                if v == -1:
                     break
-                v = int(rem[np.argmax(w[rem])])
             _absorb(v, int(p))
             unassigned -= 1
             progressed = True
@@ -256,39 +270,190 @@ def _refine_sweep(
 ) -> int:
     """One FM-style boundary sweep: move vertices to their best part when it
     reduces cut traffic and respects the balance cap.  Mutates ``assign``;
-    returns the number of moves applied."""
-    rows = g.rows()
+    returns the number of moves applied.
+
+    The vectorized sweep only records each vertex's argmax-gain part; when
+    that part is cap-blocked (or the independent-set restriction leaves
+    nothing to do) the exact sequential sweep takes over, which also picks
+    up second-best feasible parts — matching the pre-vectorization
+    behavior."""
     et = g.edge_traffic()
-    load = np.bincount(assign, weights=g.weights, minlength=n_parts)
-    boundary_mask = assign[rows] != assign[g.indices]
-    boundary = np.unique(rows[boundary_mask])
+    moved = refine_sweep_csr(
+        g.indptr, g.indices, et, g.weights, assign, n_parts, cap
+    )
+    if moved == 0:
+        moved = refine_sweep_csr_seq(
+            g.indptr, g.indices, et, g.weights, assign, n_parts, cap
+        )
+    return moved
+
+
+def refine_sweep_csr(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    et: np.ndarray,
+    w: np.ndarray,
+    assign: np.ndarray,
+    n_parts: int,
+    cap: float,
+) -> int:
+    """Vectorized boundary-KL/FM sweep on a CSR traffic graph.
+
+    ``et`` holds the per-edge traffic aligned with ``indices`` (both
+    directions stored, as in :meth:`CommGraph.edge_traffic`).  Gains are
+    computed for every boundary vertex at once with segmented reductions;
+    moves are then applied in descending-gain order on an *independent
+    set* (a vertex is skipped if any neighbor already moved this sweep),
+    so every applied gain stays exact against the snapshot and the cut is
+    strictly non-increasing.  Mutates ``assign``; returns moves applied.
+    """
+    m = indptr.shape[0] - 1
+    rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(indptr))
+    nbr_part = assign[indices]
+    if not np.any(nbr_part != assign[rows]):
+        return 0
+    load = np.bincount(assign, weights=w, minlength=n_parts)
+    # Affinity of every vertex to every adjacent part: segmented sum of
+    # edge traffic keyed by (vertex, neighbor part).
+    key = rows * n_parts + nbr_part
+    order = np.argsort(key, kind="stable")
+    ks = key[order]
+    starts = np.flatnonzero(np.r_[True, ks[1:] != ks[:-1]])
+    aff = np.add.reduceat(et[order], starts)
+    v_of = ks[starts] // n_parts
+    p_of = ks[starts] % n_parts
+    own = p_of == assign[v_of]
+    cur_aff = np.zeros(m)
+    cur_aff[v_of[own]] = aff[own]
+    # Best external part per vertex: segmented max over the non-own rows.
+    ext = ~own
+    if not ext.any():
+        return 0
+    v_ext, p_ext = v_of[ext], p_of[ext]
+    gain_ext = aff[ext] - cur_aff[v_ext]
+    best = np.lexsort((gain_ext, v_ext))
+    v_sorted = v_ext[best]
+    last = np.flatnonzero(np.r_[v_sorted[1:] != v_sorted[:-1], True])
+    cand_v = v_sorted[last]
+    cand_p = p_ext[best][last]
+    cand_gain = gain_ext[best][last]
+    pos = cand_gain > 1e-12
+    if not pos.any():
+        return 0
+    cand_v, cand_p, cand_gain = cand_v[pos], cand_p[pos], cand_gain[pos]
+    sel = np.argsort(-cand_gain, kind="stable")
+    moved_mask = np.zeros(m, dtype=bool)
+    moves = 0
+    for v, p in zip(cand_v[sel].tolist(), cand_p[sel].tolist()):
+        if load[p] + w[v] > cap:
+            continue
+        lo, hi = indptr[v], indptr[v + 1]
+        if moved_mask[indices[lo:hi]].any():
+            continue  # a neighbor moved — this gain is stale, retry next sweep
+        load[assign[v]] -= w[v]
+        load[p] += w[v]
+        assign[v] = p
+        moved_mask[v] = True
+        moves += 1
+    return moves
+
+
+def refine_sweep_csr_seq(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    et: np.ndarray,
+    w: np.ndarray,
+    assign: np.ndarray,
+    n_parts: int,
+    cap: float,
+) -> int:
+    """Sequential exact boundary sweep (the classic FM inner loop).
+
+    Unlike :func:`refine_sweep_csr`, each boundary vertex re-evaluates
+    its gain against the *current* assignment, so chains of adjacent
+    moves can cascade — this escapes the local optima the independent-set
+    sweep converges to.  O(boundary·degree) Python-level work: use it as
+    a finishing pass after the vectorized sweeps go quiet, not as the
+    main engine.  Mutates ``assign``; returns moves applied.
+    """
+    m = indptr.shape[0] - 1
+    rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(indptr))
+    load = np.bincount(assign, weights=w, minlength=n_parts)
+    boundary = np.unique(rows[assign[rows] != assign[indices]])
     moved = 0
     for v in boundary.tolist():
-        nbrs, _ = g.neighbors(v)
-        lo, hi = g.indptr[v], g.indptr[v + 1]
-        etv = et[lo:hi]
+        lo, hi = indptr[v], indptr[v + 1]
         cur = assign[v]
-        # Affinity of v to each neighbor part.
-        parts = assign[nbrs]
-        aff = {}
-        for p, t in zip(parts.tolist(), etv.tolist()):
+        aff: dict[int, float] = {}
+        for p, t in zip(assign[indices[lo:hi]].tolist(), et[lo:hi].tolist()):
             aff[p] = aff.get(p, 0.0) + t
         cur_aff = aff.get(cur, 0.0)
-        best_p, best_gain = cur, 0.0
+        best_p, best_gain = cur, 1e-12
         for p, a in aff.items():
-            if p == cur:
+            if p == cur or load[p] + w[v] > cap:
                 continue
-            if load[p] + g.weights[v] > cap:
-                continue
-            gain = a - cur_aff
-            if gain > best_gain:
-                best_gain, best_p = gain, p
+            if a - cur_aff > best_gain:
+                best_gain, best_p = a - cur_aff, p
         if best_p != cur:
-            load[cur] -= g.weights[v]
-            load[best_p] += g.weights[v]
+            load[cur] -= w[v]
+            load[best_p] += w[v]
             assign[v] = best_p
             moved += 1
     return moved
+
+
+def rebalance_csr(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    et: np.ndarray,
+    w: np.ndarray,
+    assign: np.ndarray,
+    n_parts: int,
+    cap: float,
+) -> int:
+    """Shed load from parts above ``cap`` with minimal cut increase.
+
+    For every overloaded part, its vertices are evicted in ascending
+    order of cut penalty (current internal affinity minus affinity to
+    the receiving part) until the part fits under ``cap``.  The receiver
+    is the highest-affinity adjacent part with room, falling back to the
+    least-loaded part.  Vertices that fit nowhere stay put.  Mutates
+    ``assign``; returns the number of moves.
+    """
+    m = indptr.shape[0] - 1
+    load = np.bincount(assign, weights=w, minlength=n_parts)
+    over = np.flatnonzero(load > cap * (1 + 1e-12))
+    if over.size == 0:
+        return 0
+    # Internal affinity of every vertex (traffic to its own part).
+    rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(indptr))
+    own_edge = assign[rows] == assign[indices]
+    cur_aff = np.bincount(rows[own_edge], weights=et[own_edge], minlength=m)
+    moves = 0
+    for p in over.tolist():
+        members = np.flatnonzero(assign == p)
+        for v in members[np.argsort(cur_aff[members], kind="stable")].tolist():
+            if load[p] <= cap:
+                break
+            lo, hi = indptr[v], indptr[v + 1]
+            aff: dict[int, float] = {}
+            for q, t in zip(assign[indices[lo:hi]].tolist(), et[lo:hi].tolist()):
+                if q != p:
+                    aff[q] = aff.get(q, 0.0) + t
+            best_q, best_aff = -1, -1.0
+            for q, a in aff.items():
+                if load[q] + w[v] <= cap and a > best_aff:
+                    best_aff, best_q = a, q
+            if best_q == -1:
+                q = int(np.argmin(load))
+                if q == p or load[q] + w[v] > cap:
+                    continue
+                best_q = q
+            load[p] -= w[v]
+            load[best_q] += w[v]
+            assign[v] = best_q
+            moves += 1
+    return moves
 
 
 def refine_partition(
@@ -298,15 +463,23 @@ def refine_partition(
     sweeps: int = 4,
     balance_slack: float = 0.05,
 ) -> PartitionResult:
-    """Run extra refinement sweeps on an existing partition."""
+    """Run extra refinement sweeps on an existing partition.
+
+    The returned cut is never worse than ``result.cut`` — the best
+    assignment seen (including the input) is kept.
+    """
     assign = result.assign.copy()
     cap = g.weights.sum() / result.n_parts * (1.0 + balance_slack)
     history = list(result.history)
+    best, best_cut = result.assign, result.cut
     for _ in range(sweeps):
         if _refine_sweep(g, assign, result.n_parts, cap) == 0:
             break
-        history.append(cut_traffic(g, assign))
-    return _result(g, assign, result.n_parts, tuple(history), result.method)
+        cur = cut_traffic(g, assign)
+        history.append(cur)
+        if cur < best_cut:
+            best_cut, best = cur, assign.copy()
+    return _result(g, best, result.n_parts, tuple(history), result.method)
 
 
 # ---------------------------------------------------------------------------

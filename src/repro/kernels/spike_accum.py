@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.compat import pallas_tpu_compiler_params
+
 __all__ = ["spike_accum"]
 
 
@@ -96,7 +98,7 @@ def spike_accum(
         out_specs=pl.BlockSpec((1, block_j), lambda j, i: (0, j)),
         out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, block_j), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -5,7 +5,7 @@ state (the dry-run must set XLA_FLAGS before any jax initialization).
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 __all__ = ["make_production_mesh", "POD_SIZE"]
 
@@ -16,6 +16,4 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)

@@ -60,9 +60,9 @@ def main():
     wp = w[np.ix_(perm, perm)].astype(np.float32) * 0.05
 
     mesh_shape = (2, n_dev // 2) if n_dev % 2 == 0 and n_dev > 2 else (1, n_dev)
-    mesh = jax.make_mesh(
-        mesh_shape, ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    from repro.compat import make_mesh
+
+    mesh = make_mesh(mesh_shape, ("pod", "data"))
     eng = DistributedSNN(
         mesh=mesh,
         w_syn=jnp.asarray(wp),

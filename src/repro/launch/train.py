@@ -49,10 +49,9 @@ def main():
         cfg = cfg.reduced()
     n_dev = jax.device_count()
     if n_dev > 1:
-        mesh = jax.make_mesh(
-            (n_dev // 2, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        from repro.compat import make_mesh
+
+        mesh = make_mesh((n_dev // 2, 2), ("data", "model"))
         pol = make_policy(mesh)
     else:
         pol = ShardingPolicy()

@@ -19,8 +19,10 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
 
 __all__ = ["gpipe", "bubble_fraction"]
 

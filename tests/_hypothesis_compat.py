@@ -1,0 +1,118 @@
+"""Soft dependency on ``hypothesis``.
+
+Test modules import ``given`` / ``settings`` / ``st`` from here.  When the
+real ``hypothesis`` package is installed (see ``requirements-dev.txt``) it
+is re-exported unchanged.  When it is absent, a minimal seeded-random
+fallback stands in: ``@given(x=st.integers(0, 9))`` runs the test body over
+``max_examples`` deterministically sampled example dicts instead of doing
+property-based shrinking.  The fallback keeps the same decorator surface so
+the suite collects and runs either way — coverage is thinner without
+hypothesis, never broken.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: np.random.Generator):
+            return self._sample(rng)
+
+    class _Strategies:
+        """The subset of ``hypothesis.strategies`` this suite uses."""
+
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def just(value) -> _Strategy:
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def one_of(*strategies: _Strategy) -> _Strategy:
+            return _Strategy(
+                lambda rng: strategies[int(rng.integers(len(strategies)))].sample(rng)
+            )
+
+        @staticmethod
+        def lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+            return _Strategy(
+                lambda rng: [
+                    elements.sample(rng)
+                    for _ in range(int(rng.integers(min_size, max_size + 1)))
+                ]
+            )
+
+    st = _Strategies()
+
+    def settings(**kwargs):
+        """Record settings on the function for a later ``@given`` to read."""
+
+        def deco(fn):
+            fn._compat_settings = kwargs
+            return fn
+
+        return deco
+
+    def given(**strategy_kwargs):
+        """Run the test over deterministically sampled example dicts."""
+
+        def deco(fn):
+            # ``@settings`` may sit under ``@given`` (applied first) — unwrap.
+            cfg = getattr(fn, "_compat_settings", {})
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = int(cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES))
+                # Seed from the test identity so every test gets a stable,
+                # distinct example stream (crc32, not hash() — the str hash
+                # is salted per process and would break reproducibility).
+                seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    example = {
+                        name: strat.sample(rng)
+                        for name, strat in strategy_kwargs.items()
+                    }
+                    fn(*args, **example, **kwargs)
+
+            # pytest must not treat the strategy params as fixtures.
+            sig = inspect.signature(fn)
+            params = [
+                p
+                for name, p in sig.parameters.items()
+                if name not in strategy_kwargs
+            ]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+
+        return deco

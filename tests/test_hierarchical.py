@@ -14,7 +14,8 @@ def test_two_level_equals_flat_a2a():
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.hierarchical import make_exchange_fns
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("pod", "data"))
 n_dev, chunk, d = 8, 3, 5
 x = jnp.arange(n_dev*n_dev*chunk*d, dtype=jnp.float32).reshape(n_dev, n_dev, chunk, d)
 x = jax.device_put(x, NamedSharding(mesh, P(("pod","data"))))
@@ -33,9 +34,9 @@ def test_hierarchical_psum_equals_flat():
 import functools
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import make_mesh, shard_map
 from repro.core.hierarchical import hierarchical_psum, flat_psum, two_level_all_gather
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("pod", "data"))
 g = jnp.arange(16*4, dtype=jnp.float32).reshape(16, 4)
 wrap = lambda f: jax.jit(functools.partial(shard_map, mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False)(f))
 hp = wrap(lambda v: hierarchical_psum(v))

@@ -16,7 +16,8 @@ def test_gpipe_matches_sequential():
     code = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.sharding.pipeline import gpipe
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((4,), ("pipe",))
 n_stages, d, B, mb = 4, 16, 8, 4
 key = jax.random.PRNGKey(0)
 w = jax.random.normal(key, (n_stages, d, d)) * 0.3

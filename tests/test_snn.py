@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.snn import (
     IzhikevichParams,
@@ -129,7 +129,8 @@ w = (rng.random((m, m)) < 0.2).astype(np.float32) * rng.gamma(2., 2., (m, m)).as
 np.fill_diagonal(w, 0)
 params = LIFParams(noise_sigma=0.0)
 ref = SNNEngine(w_syn=jnp.asarray(w), params=params, i_ext=4.0).run(60, key=jax.random.PRNGKey(7))
-mesh = jax.make_mesh((2, 4), ("pod", "data"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("pod", "data"))
 assign = np.repeat(np.arange(8), m // 8)
 perm = partition_permutation(assign, 8)
 wp = w[np.ix_(perm, perm)]
