@@ -14,7 +14,7 @@ import time
 import numpy as np
 
 from repro.core import (
-    device_graph,
+    device_traffic_csr,
     genetic_partition,
     greedy_partition,
     multilevel_partition,
@@ -22,7 +22,7 @@ from repro.core import (
 )
 from repro.snn import generate_brain_model
 
-__all__ = ["PaperScale", "build_setup", "emit", "timed"]
+__all__ = ["PaperScale", "build_setup", "build_device_traffic", "emit", "timed"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +62,18 @@ def build_setup(scale: PaperScale, *, method: str = "greedy"):
         "proposed": PARTITIONERS[method](g, scale.n_devices, scale.seed),
     }
     return bm, parts
+
+
+def build_device_traffic(bm, assign: np.ndarray, n_devices: int):
+    """Sparse device-traffic matrix + per-device weights for Algorithm 2.
+
+    All benchmarks route over the CSR path (`device_traffic_csr`) — the
+    dense `device_graph` builder stays available as the parity-oracle
+    input but materializes `[N, N]` and should not be used at paper scale.
+    `generate_brain_model` builds its CSR with `sym=True` (both directions
+    stored), so the symmetry auto-detection pass is skipped.
+    """
+    return device_traffic_csr(bm.graph, assign, n_devices, sym_mode="both")
 
 
 def emit(name: str, value: float, derived: str = "") -> None:

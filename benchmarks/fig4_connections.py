@@ -9,16 +9,19 @@ import argparse
 
 import numpy as np
 
-from repro.core import connection_counts, device_graph, p2p_routing, two_level_routing
-from benchmarks.common import PaperScale, build_setup, emit
+from repro.core import connection_counts, p2p_routing, two_level_routing
+from benchmarks.common import PaperScale, build_device_traffic, build_setup, emit, timed
 
 
 def run(scale: PaperScale, *, method: str = "greedy"):
     bm, parts = build_setup(scale, method=method)
-    t, wg = device_graph(bm.graph, parts["proposed"].assign, scale.n_devices)
+    # sparse CSR device traffic — no [N, N] intermediate at paper scale
+    t, wg = build_device_traffic(bm, parts["proposed"].assign, scale.n_devices)
     p2p = p2p_routing(t, wg)
-    two = two_level_routing(t, wg, scale.n_groups, grouping="greedy")
-    return connection_counts(p2p), connection_counts(two)
+    two, wall = timed(
+        two_level_routing, t, wg, scale.n_groups, grouping="greedy"
+    )
+    return connection_counts(p2p), connection_counts(two), wall
 
 
 def main(argv=None):
@@ -35,7 +38,8 @@ def main(argv=None):
         n_devices=args.devices, n_populations=args.populations,
         n_groups=args.groups or None
     )
-    c_p2p, c_two = run(scale, method=args.method)
+    c_p2p, c_two, wall = run(scale, method=args.method)
+    emit("fig4/two_level_routing_wall_s", round(wall, 2), "sparse Alg. 2 wall-clock")
     emit("fig4/mean_connections_p2p", round(float(c_p2p.mean()), 1), "paper: 1552")
     emit("fig4/mean_connections_two_level", round(float(c_two.mean()), 1), "paper: 88")
     emit(

@@ -14,18 +14,18 @@ import numpy as np
 
 from repro.core import (
     ClusterModel,
-    device_graph,
     p2p_routing,
     table2_row,
     two_level_routing,
 )
-from benchmarks.common import PaperScale, build_setup, emit
+from benchmarks.common import PaperScale, build_device_traffic, build_setup, emit
 
 NOISES = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6)
 
 
 def _row(bm, part, scale: PaperScale, routing: str, cluster: ClusterModel):
-    t, wg = device_graph(bm.graph, part.assign, scale.n_devices)
+    # sparse CSR device traffic — no [N, N] intermediate at paper scale
+    t, wg = build_device_traffic(bm, part.assign, scale.n_devices)
     if routing == "p2p":
         tb = p2p_routing(t, wg)
     else:

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    device_graph,
+    device_traffic_csr,
     greedy_partition,
     multilevel_partition,
     step_latency,
@@ -62,7 +62,7 @@ def main():
           f"loads={np.round(part.loads, 1)}")
 
     print("\n=== routing (Algorithm 2) + latency model ===")
-    t, wg = device_graph(bm.graph, part.assign, n_dev)
+    t, wg = device_traffic_csr(bm.graph, part.assign, n_dev)  # sparse CSR
     tb = two_level_routing(t, wg, 2)
     lat_p2p = step_latency(p2p_routing(t, wg)).t_total
     lat_two = step_latency(tb).t_total

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core import (
     connection_counts,
-    device_graph,
+    device_traffic_csr,
     greedy_partition,
     level2_egress,
     p2p_routing,
@@ -48,7 +48,7 @@ print(f"egress peak:  random={e_rand.max():.0f}  greedy={e_greedy.max():.0f} "
       f"({100 * (1 - e_greedy.max() / e_rand.max()):.1f}% lower — paper Fig. 3a)")
 
 print("\n=== 3. Algorithm 2: two-level routing ===")
-t, wg = device_graph(bm.graph, greedy.assign, N_DEVICES)
+t, wg = device_traffic_csr(bm.graph, greedy.assign, N_DEVICES)  # sparse CSR
 p2p = p2p_routing(t, wg)
 two = two_level_routing(t, wg)  # auto group sweep
 print(f"groups: {two.n_groups}")

@@ -23,13 +23,16 @@ from repro.core.partition import (
 )
 from repro.core.routing import (
     RoutingTable,
+    connection_components,
     connection_counts,
     device_graph,
+    device_traffic_csr,
     level1_egress,
     level2_egress,
     p2p_routing,
     two_level_routing,
 )
+from repro.core.traffic import TrafficMatrix
 from repro.core.latency import ClusterModel, LatencyBreakdown, step_latency, table2_row
 from repro.core.placement import (
     ExpertPlacement,
@@ -56,9 +59,12 @@ __all__ = [
     "imbalance",
     "per_part_egress",
     "RoutingTable",
+    "TrafficMatrix",
     "two_level_routing",
     "p2p_routing",
     "device_graph",
+    "device_traffic_csr",
+    "connection_components",
     "connection_counts",
     "level1_egress",
     "level2_egress",

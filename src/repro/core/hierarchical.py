@@ -45,6 +45,7 @@ __all__ = [
     "two_level_all_gather",
     "dispatch_bytes",
     "dispatch_messages",
+    "dispatch_messages_from_table",
 ]
 
 
@@ -162,6 +163,33 @@ def dispatch_messages(
     return {
         "cross_pod": cross,
         "intra_pod": n_pods * n_inner * (n_inner - 1),
+    }
+
+
+def dispatch_messages_from_table(tb, *, threshold: float = 0.0) -> dict[str, int]:
+    """*Measured* counterpart of :func:`dispatch_messages`.
+
+    Where :func:`dispatch_messages` counts messages for a uniform
+    ``pods × inner`` mesh analytically, this derives the level-1 / level-2
+    logical message counts implied by an actual Algorithm-2
+    :class:`~repro.core.routing.RoutingTable` (sparse or dense):
+
+      * ``level1`` — direct same-group connections plus forwarder→bridge
+        hops (the fast intra-pod / intra-group links);
+      * ``level2`` — the aggregated bridge connections crossing the group
+        boundary (the slow cross-pod links).
+
+    For a P2P table every connection is level-2 (each flow leaves the
+    device individually), matching the flat all-to-all accounting.
+    """
+    from repro.core.routing import connection_components
+
+    direct, forward, aggregated = connection_components(tb, threshold=threshold)
+    if tb.method == "p2p":
+        return {"level1": 0, "level2": int(direct.sum())}
+    return {
+        "level1": int(direct.sum() + forward.sum()),
+        "level2": int(aggregated.sum()),
     }
 
 

@@ -89,30 +89,45 @@ def _congestion_per_device(tb: RoutingTable) -> np.ndarray:
     a device's flows contend with the *fan-in* at their destinations.
     Two-level: only same-group flows plus the aggregated bridge flows
     contend on the relevant links.
+
+    Fully vectorized over the sparse traffic entries (O(nnz) + O(nnz(G²))
+    for the bridge term); dense tables are converted on entry.
     """
-    t = tb.device_traffic
+    from repro.core.traffic import TrafficMatrix
+
+    tm = tb.device_traffic
+    if not isinstance(tm, TrafficMatrix):
+        tm = TrafficMatrix.from_dense(tm)
     n = tb.n_devices
-    active = t > 0
+    rows, cols = tm.rows(), tm.indices  # every stored entry is active (> 0)
     if tb.method == "p2p":
         # fan-in congestion: flows arriving at each of my destinations
-        fan_in = active.sum(axis=0)  # how many senders target device j
-        return active @ fan_in - active.sum(axis=1)  # others, not me
+        fan_in = np.bincount(cols, minlength=n).astype(np.float64)
+        return (
+            np.bincount(rows, weights=fan_in[cols], minlength=n)
+            - np.bincount(rows, minlength=n)  # others, not me
+        )
     # two-level: destinations are same-group peers + served bridges
-    same = tb.group_of[:, None] == tb.group_of[None, :]
-    intra = active & same
-    fan_in = intra.sum(axis=0)
-    cong = (intra @ fan_in - intra.sum(axis=1)).astype(np.float64)
-    # bridges contend with other bridges targeting the same group
-    from repro.core.routing import group_pair_traffic
+    intra = tb.group_of[rows] == tb.group_of[cols]
+    r_i, c_i = rows[intra], cols[intra]
+    fan_in = np.bincount(c_i, minlength=n).astype(np.float64)
+    cong = np.bincount(r_i, weights=fan_in[c_i], minlength=n) - np.bincount(
+        r_i, minlength=n
+    )
+    # bridges contend with other bridges targeting the same group: one
+    # aggregated flow per source group arriving at gd, charged to *every*
+    # bridge carrying a share of the flow (split flows contend too)
+    from repro.core.routing import _share_coo_or_primary, group_pair_traffic
 
     gpt = group_pair_traffic(tb)
-    for gs in range(tb.n_groups):
-        for gd in range(tb.n_groups):
-            if gs == gd or gpt[gs, gd] <= 0:
-                continue
-            b = tb.bridge[gs, gd]
-            # one aggregated flow per source group arriving at gd
-            cong[b] += max(0, (gpt[:, gd] > 0).sum() - 1)
+    incoming = (gpt > 0).sum(axis=0)
+    sdev, sgrp, _ = _share_coo_or_primary(tb)
+    served = gpt[tb.group_of[sdev], sgrp] > 0
+    np.add.at(
+        cong,
+        sdev[served],
+        np.maximum(0, incoming[sgrp[served]] - 1).astype(np.float64),
+    )
     return cong
 
 

@@ -1,8 +1,8 @@
 """Algorithm 2 — the two-level routing method (paper §IV-B).
 
 Clusters the ``N`` devices into ``G`` groups by applying the same
-balance-constrained greedy strategy as Algorithm 1 to the device-level
-traffic graph (``PG[N,N]``, ``WG[N]``), then derives a routing table:
+balance-constrained strategy as Algorithm 1 to the device-level traffic
+graph (``PG[N,N]``, ``WG[N]``), then derives a routing table:
 
   * **Level-1**: devices in the same group exchange data through direct
     peer-to-peer connections.
@@ -21,6 +21,15 @@ Bridge selection balances the aggregated inter-group traffic across the
 members of each group (multiple bridges per group pair are allowed only
 through distinct (src-group, dst-group) responsibilities), which is what
 re-balances the level-2 traffic in Fig. 3(b).
+
+Implementation note: this module is the **sparse, vectorized core** —
+device traffic is carried as a CSR :class:`~repro.core.traffic.TrafficMatrix`
+and every measured quantity is computed with O(nnz) scatter/gather ops,
+which scales Algorithm 2 past 10,000 devices on one CPU.  Dense ``[N, N]``
+inputs are accepted everywhere and converted on entry.  The original dense
+implementation survives as a parity oracle (N ≤ ~256) in
+:mod:`repro.core.routing_dense`; measurement functions transparently
+dispatch to it when handed a table carrying a dense matrix.
 """
 from __future__ import annotations
 
@@ -29,14 +38,17 @@ import dataclasses
 import numpy as np
 
 from repro.core.graph import CommGraph, build_graph
+from repro.core.traffic import TrafficMatrix, _ranges
 from repro.core import partition as part_mod
 
 __all__ = [
     "RoutingTable",
     "device_graph",
+    "device_traffic_csr",
     "two_level_routing",
     "p2p_routing",
     "connection_counts",
+    "connection_components",
     "level2_egress",
     "level1_egress",
     "group_pair_traffic",
@@ -50,24 +62,42 @@ class RoutingTable:
     Attributes:
       group_of:      ``int64[N]`` device → group id.
       n_groups:      number of groups ``G``.
-      bridge:        ``int64[G, G]`` — ``bridge[gs, gd]`` is the device in
-                     group ``gs`` responsible for forwarding the aggregated
-                     traffic from ``gs`` to group ``gd`` (diagonal = -1).
-      device_traffic: ``float64[N, N]`` dense device-to-device traffic used
-                     to derive the table (kept for benchmarks; N ≤ ~4k).
+      bridge:        ``int64[G, G]`` — ``bridge[gs, gd]`` is the *primary*
+                     device in group ``gs`` responsible for forwarding the
+                     aggregated traffic from ``gs`` to group ``gd``
+                     (diagonal = -1).  Empty ``[0, 0]`` for P2P tables.
+      device_traffic: the device-to-device traffic the table was derived
+                     from — a sparse :class:`TrafficMatrix` (the scalable
+                     path) or a dense ``float64[N, N]`` (the parity oracle
+                     of :mod:`repro.core.routing_dense`).
       method:        provenance of the grouping ('greedy' | 'genetic' | ...).
+      share_coo:     bridge load fractions as COO triplets
+                     ``(device, dst_group, fraction)`` — ``fraction`` of
+                     group(device)'s traffic toward ``dst_group`` carried
+                     by ``device``.  ``None`` for P2P tables.
     """
 
     group_of: np.ndarray
     n_groups: int
     bridge: np.ndarray
-    device_traffic: np.ndarray
+    device_traffic: TrafficMatrix | np.ndarray
     method: str
-    share: np.ndarray | None = None  # [N, G] bridge load fractions
+    share_coo: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None
 
     @property
     def n_devices(self) -> int:
         return int(self.group_of.shape[0])
+
+    @property
+    def share(self) -> np.ndarray | None:
+        """Dense ``float64[N, G]`` bridge load fractions (materialized on
+        demand — prefer :attr:`share_coo` at scale)."""
+        if self.share_coo is None:
+            return None
+        dev, grp, frac = self.share_coo
+        out = np.zeros((self.n_devices, self.n_groups))
+        out[dev, grp] = frac
+        return out
 
     def members(self, g: int) -> np.ndarray:
         return np.nonzero(self.group_of == g)[0]
@@ -80,7 +110,7 @@ class RoutingTable:
         (e.g. when src *is* the bridge).
         """
         gs, gd = int(self.group_of[src]), int(self.group_of[dst])
-        if gs == gd:
+        if gs == gd or self.bridge.size == 0:
             return [src, dst]
         b_out = int(self.bridge[gs, gd])
         b_in = int(self.bridge[gd, gs])
@@ -93,17 +123,32 @@ class RoutingTable:
 
     def validate(self) -> None:
         n = self.n_devices
-        if self.group_of.min() < 0 or self.group_of.max() >= self.n_groups:
+        g = self.n_groups
+        if self.group_of.min() < 0 or self.group_of.max() >= g:
             raise ValueError("group_of out of range")
-        for gs in range(self.n_groups):
-            for gd in range(self.n_groups):
-                b = self.bridge[gs, gd]
-                if gs == gd:
-                    continue
-                if not (0 <= b < n) or self.group_of[b] != gs:
-                    raise ValueError(
-                        f"bridge[{gs},{gd}]={b} is not a member of group {gs}"
-                    )
+        if self.bridge.size == 0:
+            return
+        offdiag = ~np.eye(g, dtype=bool)
+        b = self.bridge[offdiag]
+        gs_idx = np.broadcast_to(np.arange(g)[:, None], (g, g))[offdiag]
+        bad = (b < 0) | (b >= n)
+        bad |= self.group_of[np.clip(b, 0, n - 1)] != gs_idx
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ValueError(
+                f"bridge for group pair ({gs_idx[i]}, ·) = {b[i]} is not a "
+                f"member of group {gs_idx[i]}"
+            )
+
+
+def _as_traffic(traffic: TrafficMatrix | np.ndarray) -> TrafficMatrix:
+    if isinstance(traffic, TrafficMatrix):
+        return traffic
+    return TrafficMatrix.from_dense(np.asarray(traffic, dtype=np.float64))
+
+
+def _is_dense(tb: RoutingTable) -> bool:
+    return isinstance(tb.device_traffic, np.ndarray)
 
 
 # ---------------------------------------------------------------------------
@@ -111,48 +156,87 @@ class RoutingTable:
 # ---------------------------------------------------------------------------
 
 
-def device_graph(
-    g: CommGraph, assign: np.ndarray, n_devices: int
-) -> tuple[np.ndarray, np.ndarray]:
-    """Aggregate the neuron graph into the device graph.
-
-    Returns ``(T, WG)`` where ``T[a, b]`` is the total traffic between
-    devices ``a`` and ``b`` (symmetric, zero diagonal) — the paper's
-    ``PG`` weighted by the data volumes — and ``WG[a]`` is the total
-    neuron weight on device ``a``.
-    """
+def _commgraph_is_symmetric(g: CommGraph) -> bool:
+    """True when ``g`` stores both directions of every edge with equal
+    traffic (``build_graph(..., sym=True)`` output)."""
+    m = g.num_vertices
     rows = g.rows()
     et = g.edge_traffic()
-    src_dev = assign[rows]
-    dst_dev = assign[g.indices]
-    off = src_dev * n_devices + dst_dev
-    flat = np.bincount(off, weights=et, minlength=n_devices * n_devices)
-    t = flat.reshape(n_devices, n_devices)
-    t = (t + t.T) / 2.0  # CSR stores both directions; keep symmetric once
-    np.fill_diagonal(t, 0.0)
+    key = rows * m + g.indices
+    tkey = g.indices * m + rows
+    order, torder = np.argsort(key), np.argsort(tkey)
+    return bool(
+        np.array_equal(key[order], tkey[torder])
+        and np.allclose(et[order], et[torder], rtol=1e-9)
+    )
+
+
+def device_traffic_csr(
+    g: CommGraph, assign: np.ndarray, n_devices: int, *, sym_mode: str = "auto"
+) -> tuple[TrafficMatrix, np.ndarray]:
+    """Aggregate the neuron graph into a **sparse** device traffic matrix.
+
+    The scalable counterpart of :func:`device_graph`: O(nnz) time and
+    memory, no ``[N, N]`` intermediate — use this at N ≳ 1,000 devices.
+
+    Returns ``(T, WG)`` where ``T`` is a symmetric
+    :class:`~repro.core.traffic.TrafficMatrix` of total traffic between
+    device pairs and ``WG[a]`` is the total neuron weight on device ``a``.
+
+    ``sym_mode`` says how the neuron CSR stores each flow:
+      * ``'both'`` — both directions stored; symmetrization *averages*.
+      * ``'once'`` — each flow stored once; directions must be *summed*
+        (averaging would silently lose half of every one-directional
+        flow — the historical bug).
+      * ``'auto'`` — detect by inspecting the *neuron* graph's storage
+        (device-level symmetry can coincide even for one-directional
+        neuron graphs).  Costs an O(E log E) scan; pass the mode
+        explicitly when the storage convention is known.
+    """
+    if sym_mode not in ("auto", "both", "once"):
+        raise ValueError(f"unknown sym_mode {sym_mode!r}")
+    rows = g.rows()
+    et = g.edge_traffic()
+    tm = TrafficMatrix.from_coo(assign[rows], assign[g.indices], et, n_devices)
+    halve = (
+        _commgraph_is_symmetric(g) if sym_mode == "auto" else sym_mode == "both"
+    )
+    tm = tm.symmetrized(halve=halve)
     wg = np.bincount(assign, weights=g.weights, minlength=n_devices)
-    return t, wg
+    return tm, wg
 
 
-def _graph_from_traffic(t: np.ndarray, wg: np.ndarray) -> CommGraph:
-    """Wrap a dense device-traffic matrix as a CommGraph for Algorithm 1.
+def device_graph(
+    g: CommGraph, assign: np.ndarray, n_devices: int, *, sym_mode: str = "auto"
+) -> tuple[np.ndarray, np.ndarray]:
+    """Aggregate the neuron graph into the **dense** device graph.
+
+    Returns ``(T, WG)`` with ``T[a, b]`` the total traffic between devices
+    ``a`` and ``b`` (symmetric, zero diagonal) — the paper's ``PG``
+    weighted by the data volumes — and ``WG[a]`` the total neuron weight
+    on device ``a``.  Materializes ``[N, N]``; kept for small N and as the
+    input of the dense parity oracle.  Use :func:`device_traffic_csr` at
+    scale.  Delegates to the sparse aggregation so both builders produce
+    bit-identical values.
+    """
+    tm, wg = device_traffic_csr(g, assign, n_devices, sym_mode=sym_mode)
+    return tm.to_dense(), wg
+
+
+def _graph_from_traffic(tm: TrafficMatrix, wg: np.ndarray) -> CommGraph:
+    """Wrap a device-traffic matrix as a CommGraph for Algorithm 1.
 
     Algorithm 1 consumes ``P`` and ``W`` with edge traffic ``P·W_i·W_j``;
     here the aggregate traffic ``T[a,b]`` is already the edge quantity, so
-    we encode ``P[a,b] = T[a,b] / (W_a·W_b)`` clipped to [0, 1] after
-    normalizing, preserving the *ordering* of affinities which is all the
-    greedy uses.
+    we encode ``P[a,b] = T[a,b] / (W_a·W_b)`` normalized to [0, 1],
+    preserving the *ordering* of affinities which is all the greedy uses.
     """
-    n = t.shape[0]
-    src, dst = np.nonzero(t)
-    vals = t[src, dst]
-    scale = vals.max() if vals.size else 1.0
+    src, dst, vals = tm.rows(), tm.indices, tm.data
     w = np.where(wg > 0, wg, 1.0)
     denom = w[src] * w[dst]
     probs = np.clip(vals / np.maximum(denom, 1e-30), 0.0, None)
     pscale = probs.max() if probs.size else 1.0
     probs = probs / max(pscale, 1e-30)
-    del scale
     return build_graph(src, dst, probs, w, sym=False)
 
 
@@ -161,8 +245,49 @@ def _graph_from_traffic(t: np.ndarray, wg: np.ndarray) -> CommGraph:
 # ---------------------------------------------------------------------------
 
 
+def _multilevel_grouper(dg, g, *, itermax, balance_slack, seed):
+    # local import: multilevel pulls in the whole coarsening stack
+    from repro.core.multilevel import multilevel_partition
+
+    return multilevel_partition(
+        dg, g, itermax=itermax, balance_slack=balance_slack, seed=seed
+    )
+
+
+_GROUPERS = {
+    "greedy": lambda dg, g, itermax, slack, seed: part_mod.greedy_partition(
+        dg, g, itermax=itermax, balance_slack=slack, seed=seed
+    ),
+    "multilevel": lambda dg, g, itermax, slack, seed: _multilevel_grouper(
+        dg, g, itermax=itermax, balance_slack=slack, seed=seed
+    ),
+    "genetic": lambda dg, g, itermax, slack, seed: part_mod.genetic_partition(
+        dg, g, seed=seed
+    ),
+    "random": lambda dg, g, itermax, slack, seed: part_mod.random_partition(
+        dg, g, seed=seed, balanced=True
+    ),
+}
+
+
+def sweep_candidates(n: int) -> list[int]:
+    """Deduplicated group-count candidates for the ``n_groups=None`` sweep.
+
+    The paper sweeps G ∈ {N/64, N/32, N/16, N/8}; for small N these floor
+    divisions collapse (and historically each collision was re-solved from
+    scratch).  Candidates are clamped to ≥ 2, capped at N, and deduplicated
+    preserving order so every G is solved exactly once.
+    """
+    out: list[int] = []
+    for d in (64, 32, 16, 8):
+        g = max(2, n // d)
+        if g <= n and g not in out:
+            out.append(g)
+    return out
+
+
 def two_level_routing(
-    traffic: np.ndarray,
+    traffic: TrafficMatrix | np.ndarray,
     wg: np.ndarray,
     n_groups: int | None = None,
     *,
@@ -171,70 +296,78 @@ def two_level_routing(
     seed: int = 0,
     grouping: str = "greedy",
 ) -> RoutingTable:
-    """The paper's Algorithm 2.
+    """The paper's Algorithm 2 (sparse, vectorized core).
 
     Args:
-      traffic: ``float64[N, N]`` symmetric device-to-device traffic
-        (from :func:`device_graph`).
+      traffic: symmetric device-to-device traffic — a
+        :class:`TrafficMatrix` from :func:`device_traffic_csr` (scalable)
+        or a dense ``float64[N, N]`` (converted on entry).
       wg: ``float64[N]`` per-device aggregated neuron weight.
-      n_groups: number of groups ``G``.  ``None`` sweeps a candidate set
-        and keeps the G minimizing the peak level-2 (bridge) egress —
+      n_groups: number of groups ``G``.  ``None`` sweeps the deduplicated
+        candidate set (:func:`sweep_candidates`) over a *shared* device
+        graph and keeps the G minimizing the peak level-2 (bridge) egress —
         the paper's "update the best optimal solution" outer loop.
       itermax: the paper's ``T``.
-      grouping: 'greedy' (Algorithm 2 proper) or 'genetic' /
+      grouping: 'greedy' (Algorithm 2 proper), 'multilevel' (PR 1's
+        multilevel partitioner on the device graph), or 'genetic' /
         'random' (the baselines of Fig. 3(b)).
 
     Returns:
       :class:`RoutingTable` (the paper's ``TB``).
     """
-    n = traffic.shape[0]
-    if traffic.shape != (n, n):
-        raise ValueError("traffic must be square")
+    tm = _as_traffic(traffic)
+    wg = np.asarray(wg, dtype=np.float64)
+    n = tm.n_devices
+    if wg.shape != (n,):
+        raise ValueError("wg must have one weight per device")
+    if grouping not in _GROUPERS:
+        raise ValueError(f"unknown grouping {grouping!r}")
     if n_groups is None:
+        cands = sweep_candidates(n)
+        if not cands:
+            raise ValueError("too few devices for grouping")
+        dg = _graph_from_traffic(tm, wg)  # built once, shared by the sweep
         best, best_peak = None, np.inf
-        for g in (n // 64, n // 32, n // 16, n // 8):
-            if g < 2:
-                continue
-            tb = two_level_routing(
-                traffic, wg, g, itermax=itermax,
-                balance_slack=balance_slack, seed=seed, grouping=grouping,
-            )
+        for g in cands:
+            tb = _route(tm, wg, g, dg, itermax, balance_slack, seed, grouping)
             peak = float(level2_egress(tb).max())
             if peak < best_peak:
                 best, best_peak = tb, peak
-        if best is None:
-            raise ValueError("too few devices for grouping")
         return best
     if n_groups <= 0 or n_groups > n:
         raise ValueError("need 1 <= n_groups <= n_devices")
-    dg = _graph_from_traffic(traffic, wg)
-    if grouping == "greedy":
-        res = part_mod.greedy_partition(
-            dg, n_groups, itermax=itermax, balance_slack=balance_slack, seed=seed
-        )
-    elif grouping == "genetic":
-        res = part_mod.genetic_partition(dg, n_groups, seed=seed)
-    elif grouping == "random":
-        res = part_mod.random_partition(dg, n_groups, seed=seed, balanced=True)
-    else:
-        raise ValueError(f"unknown grouping {grouping!r}")
+    dg = _graph_from_traffic(tm, wg)
+    return _route(tm, wg, n_groups, dg, itermax, balance_slack, seed, grouping)
+
+
+def _route(
+    tm: TrafficMatrix,
+    wg: np.ndarray,
+    n_groups: int,
+    dg: CommGraph,
+    itermax: int,
+    balance_slack: float,
+    seed: int,
+    grouping: str,
+) -> RoutingTable:
+    res = _GROUPERS[grouping](dg, n_groups, itermax, balance_slack, seed)
     group_of = res.assign
-    bridge, share = _select_bridges(traffic, group_of, n_groups)
+    bridge, share_coo = _select_bridges(tm, group_of, n_groups)
     tb = RoutingTable(
         group_of=group_of,
         n_groups=n_groups,
         bridge=bridge,
-        device_traffic=traffic,
+        device_traffic=tm,
         method=grouping,
-        share=share,
+        share_coo=share_coo,
     )
     tb.validate()
     return tb
 
 
 def _select_bridges(
-    traffic: np.ndarray, group_of: np.ndarray, n_groups: int
-) -> tuple[np.ndarray, np.ndarray]:
+    tm: TrafficMatrix, group_of: np.ndarray, n_groups: int
+) -> tuple[np.ndarray, tuple[np.ndarray, np.ndarray, np.ndarray]]:
     """Assign bridge responsibilities for every ordered group pair.
 
     Greedy LPT load balancing: group pairs are visited in decreasing
@@ -243,48 +376,82 @@ def _select_bridges(
     across multiple bridges ("Select GPUs to connect other groups" —
     Alg. 2 line 8 is plural), which is what flattens the Fig. 3(b) peak.
 
-    Returns (primary_bridge [G, G], share [N, G]) where ``share[d, gd]``
-    is the fraction of group(d)'s traffic toward ``gd`` carried by d.
+    All pairwise aggregates come from O(nnz) scatters; the only remaining
+    loop is the inherently sequential per-group LPT over its *nonzero*
+    destination groups.  Returns ``(primary_bridge [G, G], share_coo)``.
     """
-    n = traffic.shape[0]
-    bridge = np.full((n_groups, n_groups), -1, dtype=np.int64)
-    share = np.zeros((n, n_groups))
-    dev_to_grp = np.zeros((n, n_groups))
-    for g in range(n_groups):
-        dev_to_grp[:, g] = traffic[:, group_of == g].sum(axis=1)
-    grp_pair = np.zeros((n_groups, n_groups))
-    for g in range(n_groups):
-        grp_pair[g] = dev_to_grp[group_of == g].sum(axis=0)
-    bridge_load = np.zeros(n)
-    for gs in range(n_groups):
-        members = np.nonzero(group_of == gs)[0]
+    n = tm.n_devices
+    g = n_groups
+    rows, cols, vals = tm.rows(), tm.indices, tm.data
+    gdst = group_of[cols]
+    # [N, G] device → destination-group traffic (tie-break for LPT picks)
+    dev_to_grp = np.bincount(
+        rows * g + gdst, weights=vals, minlength=n * g
+    ).reshape(n, g)
+    grp_pair = np.bincount(
+        group_of[rows] * g + gdst, weights=vals, minlength=g * g
+    ).reshape(g, g)
+    np.fill_diagonal(grp_pair, 0.0)
+
+    member_order = np.argsort(group_of, kind="stable")
+    member_start = np.searchsorted(group_of[member_order], np.arange(g + 1))
+
+    bridge = np.full((g, g), -1, dtype=np.int64)
+    sh_dev: list[np.ndarray] = []
+    sh_grp: list[np.ndarray] = []
+    sh_frac: list[np.ndarray] = []
+    for gs in range(g):
+        members = member_order[member_start[gs] : member_start[gs + 1]]
+        if members.size == 0:
+            continue
         flows = grp_pair[gs].copy()
         flows[gs] = 0.0
         total = flows.sum()
         target = total / max(len(members), 1)
-        for gd in np.argsort(-flows):
+        bridge[gs] = members[0]
+        bridge[gs, gs] = -1
+        loads = np.zeros(members.size)
+        d2g = dev_to_grp[members]  # [m, G] slice, m = |group gs|
+        order = np.argsort(-flows, kind="stable")
+        for gd in order[flows[order] > 0]:
             f = flows[gd]
-            if gd == gs or f <= 0:
-                bridge[gs, gd] = members[0] if gd != gs else -1
-                continue
             k = int(min(len(members), max(1, np.ceil(f / max(target, 1e-30)))))
-            key = bridge_load[members] - 1e-12 * dev_to_grp[members, gd]
-            picks = members[np.argsort(key)[:k]]
-            bridge[gs, gd] = picks[0]
-            for b in picks:
-                share[b, gd] += 1.0 / k
-                bridge_load[b] += f / k
-    return bridge, share
+            key = loads - 1e-12 * d2g[:, gd]
+            picks = np.argsort(key, kind="stable")[:k]
+            bridge[gs, gd] = members[picks[0]]
+            sh_dev.append(members[picks])
+            sh_grp.append(np.full(k, gd, dtype=np.int64))
+            sh_frac.append(np.full(k, 1.0 / k))
+            loads[picks] += f / k
+    if sh_dev:
+        share_coo = (
+            np.concatenate(sh_dev),
+            np.concatenate(sh_grp),
+            np.concatenate(sh_frac),
+        )
+    else:
+        share_coo = (
+            np.empty(0, np.int64),
+            np.empty(0, np.int64),
+            np.empty(0, np.float64),
+        )
+    return bridge, share_coo
 
 
-def p2p_routing(traffic: np.ndarray, wg: np.ndarray) -> RoutingTable:
-    """Direct peer-to-peer baseline: every device is its own group."""
-    n = traffic.shape[0]
+def p2p_routing(
+    traffic: TrafficMatrix | np.ndarray, wg: np.ndarray
+) -> RoutingTable:
+    """Direct peer-to-peer baseline: every device is its own group.
+
+    The bridge matrix is left empty (a dense ``[N, N]`` of -1 at
+    N = 10,000 would be 800 MB of nothing)."""
+    tm = _as_traffic(traffic)
+    n = tm.n_devices
     return RoutingTable(
         group_of=np.arange(n, dtype=np.int64),
         n_groups=n,
-        bridge=np.full((n, n), -1, dtype=np.int64),
-        device_traffic=traffic,
+        bridge=np.empty((0, 0), dtype=np.int64),
+        device_traffic=tm,
         method="p2p",
     )
 
@@ -294,52 +461,117 @@ def p2p_routing(traffic: np.ndarray, wg: np.ndarray) -> RoutingTable:
 # ---------------------------------------------------------------------------
 
 
+def _share_coo_or_primary(
+    tb: RoutingTable,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The table's bridge shares, falling back to the primary bridges
+    carrying every flow whole (``share_coo=None`` on a hand-built grouped
+    table) — mirrors the dense oracle's share-less branches."""
+    if tb.share_coo is not None:
+        return tb.share_coo
+    g = tb.n_groups
+    offdiag = ~np.eye(g, dtype=bool)
+    gd_idx = np.broadcast_to(np.arange(g)[None, :], (g, g))[offdiag]
+    b = tb.bridge[offdiag]
+    valid = b >= 0
+    return b[valid], gd_idx[valid], np.ones(int(valid.sum()))
+
+
+def connection_components(
+    tb: RoutingTable, *, threshold: float = 0.0
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-device connection counts split by role: ``(direct, forward,
+    aggregated)``.
+
+    * ``direct``  — level-1 connections to same-group peers with traffic
+      (for P2P: to *every* destination with traffic).
+    * ``forward`` — level-1 connections from a device to each distinct
+      bridge of its own group it forwards cross-group flows through.
+      When a group-pair flow is split across multiple bridges the device
+      connects to **every** bridge carrying a share (historically only the
+      primary ``bridge[gs, gd]`` was counted — an undercount).
+    * ``aggregated`` — the level-2 connections a device serves as bridge:
+      one per (served destination group with traffic above threshold).
+
+    ``connection_counts`` is the sum; :mod:`repro.core.hierarchical` uses
+    the split for measured level-1/level-2 message accounting.
+    """
+    if _is_dense(tb):
+        from repro.core import routing_dense
+
+        return routing_dense.connection_components_dense(tb, threshold=threshold)
+    tm: TrafficMatrix = tb.device_traffic
+    n = tb.n_devices
+    rows, cols, vals = tm.rows(), tm.indices, tm.data
+    act = vals > threshold
+    if tb.method == "p2p":
+        direct = np.bincount(rows[act], minlength=n).astype(np.int64)
+        zero = np.zeros(n, dtype=np.int64)
+        return direct, zero, zero
+    g = tb.n_groups
+    gsrc = tb.group_of[rows]
+    gdst = tb.group_of[cols]
+    same = gsrc == gdst
+    direct = np.bincount(rows[act & same], minlength=n).astype(np.int64)
+
+    sdev, sgrp, _ = _share_coo_or_primary(tb)
+    # --- forward connections: distinct bridges each device sends through.
+    # Unique (src device, dst group) pairs with cross traffic …
+    cross = act & ~same
+    ukey = np.unique(rows[cross] * g + gdst[cross])
+    d_u = ukey // g
+    gd_u = ukey % g
+    # … expanded to the full bridge set of (group(src), dst group) …
+    pair_key = tb.group_of[sdev] * g + sgrp
+    order = np.argsort(pair_key, kind="stable")
+    pair_sorted = pair_key[order]
+    bdev_sorted = sdev[order]
+    want = tb.group_of[d_u] * g + gd_u
+    lo = np.searchsorted(pair_sorted, want, side="left")
+    hi = np.searchsorted(pair_sorted, want, side="right")
+    b_rep = bdev_sorted[_ranges(lo, hi)]
+    d_rep = np.repeat(d_u, hi - lo)
+    # … deduplicated by bridge device, excluding the device itself.
+    keep = b_rep != d_rep
+    uniq_db = np.unique(d_rep[keep] * n + b_rep[keep])
+    forward = np.bincount(uniq_db // n, minlength=n).astype(np.int64)
+
+    # --- aggregated connections served as bridge.
+    gpt = group_pair_traffic(tb)
+    served = gpt[tb.group_of[sdev], sgrp] > threshold
+    aggregated = np.bincount(sdev[served], minlength=n).astype(np.int64)
+    return direct, forward, aggregated
+
+
 def connection_counts(tb: RoutingTable, *, threshold: float = 0.0) -> np.ndarray:
     """Number of logical connections departing each device (Fig. 4).
 
     P2P: one connection per destination device with traffic > threshold.
-    Two-level: direct connections to same-group peers with traffic, plus —
-    for bridges only — one aggregated connection per remote group they
-    serve, plus one connection from each device to each distinct bridge it
-    must forward through.
+    Two-level: direct connections to same-group peers with traffic, plus
+    one connection from each device to each distinct bridge it forwards
+    through (every bridge of a split flow, not just the primary), plus —
+    for bridges — one aggregated connection per remote group they serve.
     """
-    t = tb.device_traffic
-    n = tb.n_devices
-    if tb.method == "p2p":
-        return (t > threshold).sum(axis=1).astype(np.int64)
-    same = tb.group_of[:, None] == tb.group_of[None, :]
-    counts = ((t > threshold) & same).sum(axis=1).astype(np.int64)
-    gpt = group_pair_traffic(tb)
-    for d in range(n):
-        gs = tb.group_of[d]
-        # Connections to bridges of the own group for every remote group
-        # this device actually sends to (deduplicated by bridge device).
-        remote_groups = np.unique(
-            tb.group_of[np.nonzero((t[d] > threshold) & ~same[d])[0]]
-        )
-        bridges_used = {
-            int(tb.bridge[gs, gd]) for gd in remote_groups if tb.bridge[gs, gd] != d
-        }
-        counts[d] += len(bridges_used)
-        # Aggregated inter-group connections this device serves as bridge.
-        if tb.share is not None:
-            counts[d] += int(
-                ((tb.share[d] > 0) & (gpt[gs] > threshold)).sum()
-            )
-        else:
-            served = np.nonzero(tb.bridge[gs] == d)[0]
-            counts[d] += sum(
-                1 for gd in served if gd != gs and gpt[gs, gd] > threshold
-            )
-    return counts
+    direct, forward, aggregated = connection_components(tb, threshold=threshold)
+    return direct + forward + aggregated
 
 
 def group_pair_traffic(tb: RoutingTable) -> np.ndarray:
-    """Aggregated traffic between group pairs ``[G, G]``."""
+    """Aggregated traffic between group pairs ``[G, G]`` (zero diagonal).
+
+    Materializes ``[G, G]`` — meant for grouped tables (G ≪ N), not for
+    the P2P table where G = N."""
+    if _is_dense(tb):
+        from repro.core import routing_dense
+
+        return routing_dense.group_pair_traffic_dense(tb)
+    tm: TrafficMatrix = tb.device_traffic
     g = tb.n_groups
-    onehot = np.zeros((tb.n_devices, g))
-    onehot[np.arange(tb.n_devices), tb.group_of] = 1.0
-    out = onehot.T @ tb.device_traffic @ onehot
+    out = np.bincount(
+        tb.group_of[tm.rows()] * g + tb.group_of[tm.indices],
+        weights=tm.data,
+        minlength=g * g,
+    ).reshape(g, g)
     np.fill_diagonal(out, 0.0)
     return out
 
@@ -353,32 +585,57 @@ def level2_egress(tb: RoutingTable) -> np.ndarray:
     bridge; non-bridge devices hand their cross-group flows to a bridge
     over level-1 links, so their level-2 egress is zero.
     """
-    t = tb.device_traffic
+    if _is_dense(tb):
+        from repro.core import routing_dense
+
+        return routing_dense.level2_egress_dense(tb)
+    tm: TrafficMatrix = tb.device_traffic
     n = tb.n_devices
     if tb.method == "p2p":
-        return t.sum(axis=1)
+        return tm.row_sums()
     gpt = group_pair_traffic(tb)
-    if tb.share is not None:
-        return (tb.share * gpt[tb.group_of]).sum(axis=1)
-    out = np.zeros(n)
-    for gs in range(tb.n_groups):
-        for gd in range(tb.n_groups):
-            if gs == gd:
-                continue
-            out[tb.bridge[gs, gd]] += gpt[gs, gd]
-    return out
+    sdev, sgrp, sfrac = _share_coo_or_primary(tb)
+    return np.bincount(
+        sdev, weights=sfrac * gpt[tb.group_of[sdev], sgrp], minlength=n
+    )
 
 
 def level1_egress(tb: RoutingTable) -> np.ndarray:
-    """Per-device level-1 (intra-group + to-bridge) egress traffic."""
-    t = tb.device_traffic
+    """Per-device level-1 (intra-group + to-bridge) egress traffic.
+
+    A cross-group flow is forwarded to the bridges of the sender's group
+    in proportion to their ``share`` of the (gs, gd) aggregate; the
+    sender's own share (when it is itself one of those bridges) stays
+    local — consistent with how :func:`level2_egress` splits the
+    aggregate across the same bridges.
+    """
+    if _is_dense(tb):
+        from repro.core import routing_dense
+
+        return routing_dense.level1_egress_dense(tb)
+    tm: TrafficMatrix = tb.device_traffic
     n = tb.n_devices
-    same = tb.group_of[:, None] == tb.group_of[None, :]
-    out = (t * same).sum(axis=1)
     if tb.method == "p2p":
         return np.zeros(n)
-    # forwarding hop to the bridge for cross-group flows (unless self)
-    bridge_of = tb.bridge[tb.group_of[:, None], tb.group_of[None, :]]  # [N,N]
-    fwd_mask = ~same & (bridge_of != np.arange(n)[:, None])
-    out += (t * fwd_mask).sum(axis=1)
+    g = tb.n_groups
+    rows, cols, vals = tm.rows(), tm.indices, tm.data
+    gsrc = tb.group_of[rows]
+    gdst = tb.group_of[cols]
+    same = gsrc == gdst
+    out = np.bincount(rows[same], weights=vals[same], minlength=n)
+    # forwarding hops: each cross flow minus the sender's own bridge share
+    cross = ~same
+    sdev, sgrp, sfrac = _share_coo_or_primary(tb)
+    share_key = sdev * g + sgrp  # unique: a device bridges a group once
+    order = np.argsort(share_key, kind="stable")
+    share_key, share_frac = share_key[order], sfrac[order]
+    edge_key = rows[cross] * g + gdst[cross]
+    pos = np.searchsorted(share_key, edge_key)
+    pos = np.minimum(pos, max(share_key.size - 1, 0))
+    own = np.where(
+        share_key.size and share_key[pos] == edge_key, share_frac[pos], 0.0
+    )
+    out += np.bincount(
+        rows[cross], weights=vals[cross] * (1.0 - own), minlength=n
+    )
     return out

@@ -1,0 +1,177 @@
+"""Sparse device-level traffic matrices (CSR).
+
+Algorithm 2 consumes the *device* traffic graph ``T[N, N]`` aggregated
+from the neuron/population :class:`~repro.core.graph.CommGraph`.  A dense
+``float64[N, N]`` caps the routing subsystem near the paper's N = 2,000
+GPUs (800 MB at N = 10,000); real inter-device traffic is sparse — each
+device talks to a bounded neighborhood — so we carry it in the same CSR
+shape the rest of the pipeline uses (``indptr / indices / data``), with
+``data`` holding the aggregated traffic volume instead of a connection
+probability.
+
+:class:`TrafficMatrix` is the canonical representation of the sparse
+routing core in :mod:`repro.core.routing`; the dense path survives as a
+parity oracle in :mod:`repro.core.routing_dense`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["TrafficMatrix"]
+
+
+def _ranges(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """Concatenate ``[arange(lo[i], hi[i]) for i]`` without a Python loop."""
+    cnt = hi - lo
+    total = int(cnt.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64)
+    # start-of-segment offsets into the flat output
+    starts = np.zeros(cnt.shape[0], dtype=np.int64)
+    np.cumsum(cnt[:-1], out=starts[1:])
+    out = np.arange(total, dtype=np.int64)
+    out += np.repeat(lo - starts, cnt)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficMatrix:
+    """CSR matrix of aggregated device-to-device traffic.
+
+    Invariants (enforced by the constructors below): column indices are
+    sorted within each row, duplicates are merged by summation, the
+    diagonal is empty, and every stored value is positive.
+
+    Attributes:
+      indptr:  ``int64[N + 1]`` CSR row pointers.
+      indices: ``int64[nnz]`` column (destination device) indices.
+      data:    ``float64[nnz]`` traffic volumes.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    data: np.ndarray
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.indptr.shape[0] - 1)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def rows(self) -> np.ndarray:
+        """CSR row index for every stored entry."""
+        return np.repeat(
+            np.arange(self.n_devices, dtype=np.int64), np.diff(self.indptr)
+        )
+
+    def row_sums(self) -> np.ndarray:
+        """Total egress traffic per device."""
+        return np.bincount(
+            self.rows(), weights=self.data, minlength=self.n_devices
+        )
+
+    def total(self) -> float:
+        return float(self.data.sum())
+
+    def to_dense(self) -> np.ndarray:
+        """Materialize ``float64[N, N]`` (small N only)."""
+        n = self.n_devices
+        out = np.zeros((n, n))
+        out[self.rows(), self.indices] = self.data
+        return out
+
+    def transpose(self) -> "TrafficMatrix":
+        return TrafficMatrix.from_coo(
+            self.indices, self.rows(), self.data, self.n_devices
+        )
+
+    def is_symmetric(self, *, rtol: float = 1e-9, atol: float = 0.0) -> bool:
+        """True when both directions are stored with (numerically) equal
+        volume — i.e. the matrix equals its transpose."""
+        tt = self.transpose()
+        return (
+            np.array_equal(self.indptr, tt.indptr)
+            and np.array_equal(self.indices, tt.indices)
+            and np.allclose(self.data, tt.data, rtol=rtol, atol=atol)
+        )
+
+    def symmetrized(self, *, halve: bool) -> "TrafficMatrix":
+        """Return ``(T + Tᵀ)/2`` (``halve=True``; storage already held both
+        directions) or ``T + Tᵀ`` (``halve=False``; each pair stored once)."""
+        r, c, v = self.rows(), self.indices, self.data
+        if halve:
+            v = v / 2.0
+        return TrafficMatrix.from_coo(
+            np.concatenate([r, c]),
+            np.concatenate([c, r]),
+            np.concatenate([v, v]),
+            self.n_devices,
+        )
+
+    def validate(self) -> None:
+        n = self.n_devices
+        if self.indptr[0] != 0 or self.indptr[-1] != self.nnz:
+            raise ValueError("indptr must start at 0 and end at nnz")
+        if np.any(np.diff(self.indptr) < 0):
+            raise ValueError("indptr must be nondecreasing")
+        if self.nnz:
+            if self.indices.min() < 0 or self.indices.max() >= n:
+                raise ValueError("column indices out of range")
+            if np.any(self.rows() == self.indices):
+                raise ValueError("diagonal entries are not allowed")
+        if np.any(self.data <= 0):
+            raise ValueError("stored traffic must be positive")
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_coo(
+        cls,
+        src: np.ndarray,
+        dst: np.ndarray,
+        vals: np.ndarray,
+        n_devices: int,
+    ) -> "TrafficMatrix":
+        """Build from COO triplets: duplicates are *summed* (aggregation
+        semantics), self-loops and non-positive values are dropped."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        vals = np.asarray(vals, dtype=np.float64)
+        keep = (src != dst) & (vals > 0)
+        src, dst, vals = src[keep], dst[keep], vals[keep]
+        key = src * n_devices + dst
+        order = np.argsort(key, kind="stable")
+        key, vals = key[order], vals[order]
+        if key.size:
+            # boundaries of equal-key runs (keys are sorted — cheaper than
+            # np.unique, which would sort again)
+            first = np.empty(key.shape[0], dtype=bool)
+            first[0] = True
+            np.not_equal(key[1:], key[:-1], out=first[1:])
+            start = np.nonzero(first)[0]
+            uniq = key[start]
+            merged = np.add.reduceat(vals, start)
+        else:
+            uniq, merged = key, vals
+        rows = uniq // n_devices
+        cols = uniq % n_devices
+        counts = np.bincount(rows, minlength=n_devices)
+        indptr = np.zeros(n_devices + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        tm = cls(indptr=indptr, indices=cols, data=merged)
+        tm.validate()
+        return tm
+
+    @classmethod
+    def from_dense(cls, t: np.ndarray) -> "TrafficMatrix":
+        """Build from a dense ``[N, N]`` matrix (zeros/diagonal dropped)."""
+        t = np.asarray(t, dtype=np.float64)
+        n = t.shape[0]
+        if t.shape != (n, n):
+            raise ValueError("traffic matrix must be square")
+        src, dst = np.nonzero(t)
+        return cls.from_coo(src, dst, t[src, dst], n)

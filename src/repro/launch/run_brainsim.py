@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    device_graph,
+    device_traffic_csr,
     greedy_partition,
     p2p_routing,
     step_latency,
@@ -42,7 +42,7 @@ def main():
         seed=args.seed,
     )
     part = greedy_partition(bm.graph, n_dev, seed=args.seed)
-    t, wg = device_graph(bm.graph, part.assign, n_dev)
+    t, wg = device_traffic_csr(bm.graph, part.assign, n_dev)  # sparse CSR
     tb = two_level_routing(t, wg, max(2, n_dev // 4))
     print(
         f"devices={n_dev} cut={part.cut:.1f} groups={tb.n_groups} "

@@ -11,7 +11,11 @@ from repro.snn.neuron import (
     lif_step,
 )
 from repro.snn.engine import RunResult, SNNEngine, expand_synapses
-from repro.snn.distributed import DistributedSNN, partition_permutation
+from repro.snn.distributed import (
+    DistributedSNN,
+    group_mesh_permutation,
+    partition_permutation,
+)
 
 __all__ = [
     "BrainModel",
@@ -26,5 +30,6 @@ __all__ = [
     "RunResult",
     "expand_synapses",
     "DistributedSNN",
+    "group_mesh_permutation",
     "partition_permutation",
 ]

@@ -45,7 +45,30 @@ from repro.snn.neuron import (
     lif_step,
 )
 
-__all__ = ["DistributedSNN", "partition_permutation"]
+__all__ = ["DistributedSNN", "partition_permutation", "group_mesh_permutation"]
+
+
+def group_mesh_permutation(tb) -> tuple[np.ndarray, tuple[int, int]]:
+    """Map an Algorithm-2 :class:`~repro.core.routing.RoutingTable` onto a
+    2-D device mesh.
+
+    Returns ``(perm, (G, N/G))``: ``perm`` orders devices
+    group-contiguously (``perm[k]`` is the physical device at mesh slot
+    ``k``), so a mesh of shape ``(G, N/G)`` puts axis 0 (the slow / pod
+    axis) across routing groups and axis 1 inside each group — the
+    ``exchange='two_level'`` schedule then realizes exactly the table's
+    level-1 / level-2 split.  Requires equal group sizes (static mesh
+    shapes); group with ``grouping='random'``/balanced partitions or pad
+    upstream otherwise.
+    """
+    counts = np.bincount(tb.group_of, minlength=tb.n_groups)
+    if counts.max() != counts.min():
+        raise ValueError(
+            f"uneven grouping ({counts.min()}–{counts.max()} devices per "
+            "group); a mesh needs equal group sizes"
+        )
+    perm = np.argsort(tb.group_of, kind="stable")
+    return perm, (tb.n_groups, int(counts[0]))
 
 
 def partition_permutation(assign: np.ndarray, n_devices: int) -> np.ndarray:

@@ -14,6 +14,18 @@ from repro.sharding.policies import ShardingPolicy
 POL = ShardingPolicy()
 KEY = jax.random.PRNGKey(0)
 
+# The fast tier (-m "not slow") keeps one representative architecture per
+# test; the full per-arch sweep is jit-compilation-heavy and runs in the
+# tier-1 / nightly pass.
+FAST_ARCH = "deepseek-7b"
+
+
+def _arch_params(archs):
+    return [
+        pytest.param(a, marks=() if a == FAST_ARCH else pytest.mark.slow)
+        for a in archs
+    ]
+
 
 def _batch(cfg, b, s, key=jax.random.PRNGKey(1)):
     if cfg.modality == "audio":
@@ -31,7 +43,7 @@ def _batch(cfg, b, s, key=jax.random.PRNGKey(1)):
     return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
 
-@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("arch", _arch_params(sorted(ARCHS)))
 def test_smoke_forward_loss(arch):
     """One forward/loss step on CPU for every assigned architecture
     (reduced, family-preserving config): finite loss, right shapes."""
@@ -53,7 +65,7 @@ def test_smoke_forward_loss(arch):
         assert logits.shape == (2, 64, vp)
 
 
-@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("arch", _arch_params(sorted(ARCHS)))
 def test_smoke_train_step(arch):
     """One full train step (fwd+bwd+AdamW): finite loss and grads."""
     from repro.train import TrainStepConfig, init_opt_state, make_train_step
@@ -75,7 +87,9 @@ def test_smoke_train_step(arch):
 
 @pytest.mark.parametrize(
     "arch",
-    ["deepseek-7b", "mixtral-8x22b", "mamba2-1.3b", "recurrentgemma-9b", "qwen3-moe-30b-a3b"],
+    _arch_params(
+        ["deepseek-7b", "mixtral-8x22b", "mamba2-1.3b", "recurrentgemma-9b", "qwen3-moe-30b-a3b"]
+    ),
 )
 def test_decode_matches_forward(arch):
     """prefill(S) + decode(token S) == forward(S+1) last logits."""
@@ -100,7 +114,7 @@ def test_decode_matches_forward(arch):
 
 
 
-@pytest.mark.parametrize("arch", ["deepseek-7b", "qwen3-moe-30b-a3b"])
+@pytest.mark.parametrize("arch", _arch_params(["deepseek-7b", "qwen3-moe-30b-a3b"]))
 def test_multistep_decode_matches_forward(arch):
     """Decode SEVERAL tokens past the prompt (regression: cache writes
     past the prefill length were silent no-ops before max_len existed)."""

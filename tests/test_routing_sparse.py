@@ -1,0 +1,460 @@
+"""Sparse routing core: dense-oracle parity, accounting-bug regressions,
+conservation invariants, and the 10k-device scale gate.
+
+The sparse CSR path in :mod:`repro.core.routing` must reproduce the dense
+reference in :mod:`repro.core.routing_dense` *exactly* (integer outputs)
+/ to float tolerance (egress sums) on small instances, and must scale to
+N = 10,000 devices on one CPU.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core import (
+    RoutingTable,
+    TrafficMatrix,
+    connection_components,
+    connection_counts,
+    device_graph,
+    device_traffic_csr,
+    greedy_partition,
+    level1_egress,
+    level2_egress,
+    p2p_routing,
+    two_level_routing,
+)
+from repro.core import routing_dense as rd
+from repro.core.graph import build_graph, watts_strogatz_graph
+from repro.core.routing import (
+    _select_bridges,
+    group_pair_traffic,
+    sweep_candidates,
+)
+
+
+def _random_traffic(n=64, comm=8, seed=0):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, comm, n)
+    base = rng.random((n, n)) * 0.2
+    boost = (labels[:, None] == labels[None, :]) * rng.random((n, n)) * 2.0
+    t = base + boost
+    t = (t + t.T) / 2
+    np.fill_diagonal(t, 0.0)
+    return t, rng.uniform(0.5, 2.0, n)
+
+
+def _sparse_random_traffic(n, degree, seed=0):
+    """Uniform sparse symmetric traffic with ~``degree`` entries per row."""
+    rng = np.random.default_rng(seed)
+    m = n * degree // 2
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    vals = rng.uniform(0.1, 1.0, m)
+    tm = TrafficMatrix.from_coo(src, dst, vals, n).symmetrized(halve=False)
+    return tm, rng.uniform(0.5, 2.0, n)
+
+
+# ---------------------------------------------------------------------------
+# TrafficMatrix container
+# ---------------------------------------------------------------------------
+
+
+class TestTrafficMatrix:
+    def test_roundtrip(self):
+        t, _ = _random_traffic(n=32)
+        tm = TrafficMatrix.from_dense(t)
+        assert np.array_equal(tm.to_dense(), t)
+        assert tm.nnz == (t > 0).sum()
+        assert np.allclose(tm.row_sums(), t.sum(axis=1))
+        assert tm.is_symmetric()
+
+    def test_coo_aggregation(self):
+        # duplicates sum, self-loops and zeros drop
+        tm = TrafficMatrix.from_coo(
+            [0, 0, 1, 1, 2], [1, 1, 0, 1, 0], [1.0, 2.0, 4.0, 9.0, 0.0], 3
+        )
+        dense = tm.to_dense()
+        assert dense[0, 1] == 3.0 and dense[1, 0] == 4.0 and dense[2, 0] == 0.0
+
+    def test_symmetrized_modes(self):
+        tm = TrafficMatrix.from_coo([0], [1], [2.0], 2)
+        once = tm.symmetrized(halve=False).to_dense()
+        assert once[0, 1] == 2.0 and once[1, 0] == 2.0
+        both = tm.symmetrized(halve=False).symmetrized(halve=True).to_dense()
+        assert both[0, 1] == 2.0  # averaging an already-symmetric store
+
+    def test_validate_rejects_diagonal(self):
+        with pytest.raises(ValueError):
+            TrafficMatrix(
+                indptr=np.array([0, 1, 1]),
+                indices=np.array([0]),
+                data=np.array([1.0]),
+            ).validate()
+
+
+# ---------------------------------------------------------------------------
+# Dense-oracle parity (acceptance: exact for N <= 256, >= 3 seeds)
+# ---------------------------------------------------------------------------
+
+
+def _assert_parity(t, wg, n_groups, seed):
+    tb = two_level_routing(t, wg, n_groups, seed=seed)
+    td = rd.two_level_routing_dense(t, wg, n_groups, seed=seed)
+    assert np.array_equal(tb.group_of, td.group_of)
+    assert np.array_equal(tb.bridge, td.bridge)
+    assert np.array_equal(
+        connection_counts(tb), rd.connection_counts_dense(td)
+    )
+    assert np.allclose(
+        level2_egress(tb), rd.level2_egress_dense(td), rtol=1e-9, atol=1e-12
+    )
+    assert np.allclose(
+        level1_egress(tb), rd.level1_egress_dense(td), rtol=1e-9, atol=1e-12
+    )
+    assert np.allclose(
+        group_pair_traffic(tb), rd.group_pair_traffic_dense(td), rtol=1e-9
+    )
+    p, pd = p2p_routing(t, wg), rd.p2p_routing_dense(t, wg)
+    assert np.array_equal(connection_counts(p), rd.connection_counts_dense(pd))
+    assert np.allclose(level2_egress(p), rd.level2_egress_dense(pd), rtol=1e-9)
+
+
+class TestDenseOracleParity:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_exact_parity_random(self, seed):
+        t, wg = _random_traffic(n=96, seed=seed)
+        _assert_parity(t, wg, 8, seed)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_exact_parity_device_graph(self, seed):
+        """End-to-end: neuron graph → device traffic → routing, both paths
+        fed the same (bit-identical) builder output."""
+        g = watts_strogatz_graph(1024, k=8, beta=0.15, seed=seed)
+        part = greedy_partition(g, 64, seed=seed)
+        td, wgd = device_graph(g, part.assign, 64)
+        tms, wgs = device_traffic_csr(g, part.assign, 64)
+        assert np.array_equal(td, tms.to_dense())
+        assert np.array_equal(wgd, wgs)
+        tb = two_level_routing(tms, wgs, 8, seed=seed)
+        to = rd.two_level_routing_dense(td, wgd, 8, seed=seed)
+        assert np.array_equal(tb.group_of, to.group_of)
+        assert np.array_equal(tb.bridge, to.bridge)
+        assert np.array_equal(connection_counts(tb), rd.connection_counts_dense(to))
+
+    @given(seed=st.integers(0, 20), g=st.sampled_from([4, 8, 16]))
+    @settings(max_examples=6, deadline=None)
+    def test_parity_property(self, seed, g):
+        t, wg = _random_traffic(n=64, seed=seed)
+        _assert_parity(t, wg, g, seed)
+
+    def test_sweep_parity(self):
+        t, wg = _random_traffic(n=128, seed=3)
+        tb = two_level_routing(t, wg, None)
+        td = rd.two_level_routing_dense(t, wg, None)
+        assert tb.n_groups == td.n_groups
+        assert np.array_equal(tb.group_of, td.group_of)
+        assert np.array_equal(tb.bridge, td.bridge)
+
+
+# ---------------------------------------------------------------------------
+# Regression: split bridges must be counted by their forwarders (Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+class TestSplitBridgeCounting:
+    def _split_table(self):
+        # Two groups of two.  The g0→g1 aggregate (10.0) is twice the
+        # balanced target (10/2), so _select_bridges splits it across both
+        # members — same for g1→g0.
+        t = np.zeros((4, 4))
+        t[0, 1] = t[1, 0] = 1.0
+        t[2, 3] = t[3, 2] = 1.0
+        t[0, 2] = t[2, 0] = 5.0
+        t[1, 3] = t[3, 1] = 5.0
+        group_of = np.array([0, 0, 1, 1])
+        tm = TrafficMatrix.from_dense(t)
+        bridge, share_coo = _select_bridges(tm, group_of, 2)
+        tb = RoutingTable(
+            group_of=group_of,
+            n_groups=2,
+            bridge=bridge,
+            device_traffic=tm,
+            method="greedy",
+            share_coo=share_coo,
+        )
+        return t, tb
+
+    def test_flow_is_split(self):
+        _, tb = self._split_table()
+        _, _, frac = tb.share_coo
+        assert (frac < 1.0).any(), "setup must produce a split flow"
+
+    def test_forwarders_count_every_bridge(self):
+        _, tb = self._split_table()
+        direct, forward, aggregated = connection_components(tb)
+        # every device: 1 intra peer, 1 forwarding connection (the *other*
+        # member also carries a share; self is excluded), 1 aggregated
+        # connection as bridge
+        assert np.array_equal(direct, [1, 1, 1, 1])
+        assert np.array_equal(forward, [1, 1, 1, 1])
+        assert np.array_equal(aggregated, [1, 1, 1, 1])
+        counts = connection_counts(tb)
+        assert np.array_equal(counts, [3, 3, 3, 3])
+        # the historical accounting (primary bridge only) undercounts:
+        # device 1 forwards through device 0 (primary) AND carries its own
+        # share; device 0's forward connection to device 1 was dropped.
+        primary_only = np.zeros(4, dtype=np.int64)
+        for d in range(4):
+            gs = tb.group_of[d]
+            gd = 1 - gs
+            b = tb.bridge[gs, gd]
+            primary_only[d] = 1 if b != d else 0
+        assert counts.sum() > (direct + primary_only + aggregated).sum()
+
+    def test_share_none_fallback_matches_dense(self):
+        # a hand-built grouped table without shares falls back to the
+        # primary bridges carrying every flow whole — on both paths
+        t, wg = _random_traffic(n=48, seed=7)
+        ref = two_level_routing(t, wg, 6, seed=7)
+        tb = RoutingTable(
+            group_of=ref.group_of, n_groups=6, bridge=ref.bridge,
+            device_traffic=ref.device_traffic, method="greedy",
+        )
+        td = RoutingTable(
+            group_of=ref.group_of, n_groups=6, bridge=ref.bridge,
+            device_traffic=t, method="greedy",
+        )
+        assert tb.share is None and td.share is None
+        assert np.array_equal(
+            connection_counts(tb), rd.connection_counts_dense(td)
+        )
+        assert np.allclose(
+            level2_egress(tb), rd.level2_egress_dense(td), rtol=1e-9
+        )
+
+    def test_matches_dense_oracle(self):
+        t, tb = self._split_table()
+        bridge_d, share_d = rd._select_bridges_dense(t, tb.group_of, 2)
+        b_idx, g_idx = np.nonzero(share_d > 0)
+        td = RoutingTable(
+            group_of=tb.group_of,
+            n_groups=2,
+            bridge=bridge_d,
+            device_traffic=t,
+            method="greedy",
+            share_coo=(b_idx, g_idx, share_d[b_idx, g_idx]),
+        )
+        assert np.array_equal(tb.bridge, td.bridge)
+        assert np.array_equal(
+            connection_counts(tb), rd.connection_counts_dense(td)
+        )
+
+
+# ---------------------------------------------------------------------------
+# Regression: the n_groups=None sweep solves each G exactly once
+# ---------------------------------------------------------------------------
+
+
+class TestSweepDedup:
+    def test_candidates_deduplicated(self):
+        assert sweep_candidates(128) == [2, 4, 8, 16]
+        assert sweep_candidates(2000) == [31, 62, 125, 250]
+        # small N: n//64, n//32, n//16 all clamp to 2 — one candidate
+        assert sweep_candidates(40) == [2, 5]
+        assert sweep_candidates(16) == [2]
+        assert len(set(sweep_candidates(40))) == len(sweep_candidates(40))
+
+    def test_each_g_solved_once(self, monkeypatch):
+        import repro.core.partition as part_mod
+        import repro.core.routing as routing
+
+        solved: list[int] = []
+        graphs_built = []
+        real_partition = part_mod.greedy_partition
+        real_graph = routing._graph_from_traffic
+
+        def counting_partition(dg, n_parts, **kw):
+            solved.append(n_parts)
+            return real_partition(dg, n_parts, **kw)
+
+        def counting_graph(tm, wg):
+            graphs_built.append(1)
+            return real_graph(tm, wg)
+
+        monkeypatch.setattr(part_mod, "greedy_partition", counting_partition)
+        monkeypatch.setattr(routing, "_graph_from_traffic", counting_graph)
+        t, wg = _random_traffic(n=40, seed=5)
+        tb = two_level_routing(t, wg, None)
+        assert sorted(solved) == sorted(set(solved)) == [2, 5]
+        assert len(graphs_built) == 1, "device graph must be shared by the sweep"
+        assert tb.n_groups in (2, 5)
+
+
+# ---------------------------------------------------------------------------
+# Regression: one-directional traffic must not be halved
+# ---------------------------------------------------------------------------
+
+
+class TestOneDirectionalDeviceGraph:
+    def _ring(self, sym: bool):
+        src = np.array([0, 1, 2, 3])
+        dst = np.array([1, 2, 3, 0])
+        return build_graph(src, dst, [0.5] * 4, np.ones(4), sym=sym)
+
+    def test_one_directional_not_halved(self):
+        # devices {0,1} and {2,3}; cross edges 1→2 and 3→0 land in
+        # opposite device directions, so the aggregated matrix *looks*
+        # symmetric — the old (t + t.T)/2 silently halved both flows.
+        g = self._ring(sym=False)
+        assign = np.arange(4) // 2
+        t, _ = device_graph(g, assign, 2)
+        assert t[0, 1] == 1.0 and t[1, 0] == 1.0
+        tm, _ = device_traffic_csr(g, assign, 2)
+        assert np.array_equal(tm.to_dense(), t)
+
+    def test_both_directions_averaged(self):
+        # same physical traffic stored in both directions: total unchanged
+        g = self._ring(sym=True)
+        assign = np.arange(4) // 2
+        t, _ = device_graph(g, assign, 2)
+        assert t[0, 1] == 1.0
+
+    def test_explicit_flag_overrides(self):
+        g = self._ring(sym=False)
+        assign = np.arange(4) // 2
+        t_once, _ = device_graph(g, assign, 2, sym_mode="once")
+        t_both, _ = device_graph(g, assign, 2, sym_mode="both")
+        assert t_once[0, 1] == 2 * t_both[0, 1]
+        with pytest.raises(ValueError):
+            device_graph(g, assign, 2, sym_mode="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Conservation invariants
+# ---------------------------------------------------------------------------
+
+
+class TestConservation:
+    @given(seed=st.integers(0, 20))
+    @settings(max_examples=8, deadline=None)
+    def test_totals_conserved(self, seed):
+        tm, wg = _sparse_random_traffic(256, degree=12, seed=seed)
+        tb = two_level_routing(tm, wg, 16, seed=seed)
+        total = tm.total()
+        gpt = group_pair_traffic(tb)
+        cross = gpt.sum()
+        intra = total - cross
+        # level-2 egress carries exactly the aggregated inter-group traffic
+        assert np.isclose(level2_egress(tb).sum(), cross, rtol=1e-9)
+        # level-1 carries all intra traffic plus the forwarded fraction of
+        # cross traffic (each flow minus the sender's own bridge share)
+        rows, cols, vals = tm.rows(), tm.indices, tm.data
+        gs_e, gd_e = tb.group_of[rows], tb.group_of[cols]
+        cross_e = gs_e != gd_e
+        own = tb.share[rows[cross_e], gd_e[cross_e]]
+        forwarded = (vals[cross_e] * (1.0 - own)).sum()
+        assert np.isclose(level1_egress(tb).sum(), intra + forwarded, rtol=1e-9)
+        # p2p and two-level agree on the total traffic entering the fabric
+        p2p = p2p_routing(tm, wg)
+        assert np.isclose(level2_egress(p2p).sum(), total, rtol=1e-9)
+        assert np.isclose(
+            level2_egress(p2p).sum(), intra + cross, rtol=1e-9
+        )
+
+    @given(seed=st.integers(0, 20))
+    @settings(max_examples=6, deadline=None)
+    def test_share_fractions_complete(self, seed):
+        tm, wg = _sparse_random_traffic(128, degree=10, seed=seed)
+        tb = two_level_routing(tm, wg, 8, seed=seed)
+        sdev, sgrp, sfrac = tb.share_coo
+        gpt = group_pair_traffic(tb)
+        # every nonzero group pair's shares sum to 1
+        agg = np.zeros((tb.n_groups, tb.n_groups))
+        np.add.at(agg, (tb.group_of[sdev], sgrp), sfrac)
+        nz = gpt > 0
+        assert np.allclose(agg[nz], 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Routing-table mesh wiring (snn.distributed)
+# ---------------------------------------------------------------------------
+
+
+class TestGroupMeshPermutation:
+    def test_balanced_grouping_maps_to_mesh(self):
+        from repro.snn import group_mesh_permutation
+
+        t, wg = _random_traffic(n=32, seed=0)
+        tb = two_level_routing(t, wg, 4, grouping="random")
+        perm, (pods, inner) = group_mesh_permutation(tb)
+        assert (pods, inner) == (4, 8)
+        assert np.array_equal(np.sort(perm), np.arange(32))
+        # group-contiguous: mesh row p holds exactly group p's devices
+        regrouped = tb.group_of[perm].reshape(pods, inner)
+        assert (regrouped == np.arange(pods)[:, None]).all()
+
+    def test_uneven_grouping_rejected(self):
+        from repro.snn import group_mesh_permutation
+
+        t, wg = _random_traffic(n=33, seed=0)
+        tb = two_level_routing(t, wg, 4)
+        with pytest.raises(ValueError):
+            group_mesh_permutation(tb)
+
+
+# ---------------------------------------------------------------------------
+# Multilevel grouping plug-in
+# ---------------------------------------------------------------------------
+
+
+class TestMultilevelGrouping:
+    def test_multilevel_grouping(self):
+        t, wg = _random_traffic(n=96, seed=1)
+        tb = two_level_routing(t, wg, 8, grouping="multilevel")
+        tb.validate()
+        assert tb.method == "multilevel"
+        assert connection_counts(tb).mean() < connection_counts(
+            p2p_routing(t, wg)
+        ).mean()
+
+    def test_unknown_grouping_rejected(self):
+        t, wg = _random_traffic(n=32)
+        with pytest.raises(ValueError):
+            two_level_routing(t, wg, 4, grouping="metis")
+
+
+# ---------------------------------------------------------------------------
+# Scale gate (acceptance: N = 10,000 devices in < 60 s on one CPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestScale10k:
+    def test_10k_devices_under_60s(self):
+        # degree ≫ G is the paper's regime (Fig. 4: 1,552 connections on
+        # N = 2,000 — a near-dense device graph); that's where bridge
+        # aggregation collapses the cross-group fan-out
+        n = 10_000
+        tm, wg = _sparse_random_traffic(n, degree=400, seed=0)
+        t0 = time.time()
+        tb = two_level_routing(tm, wg, 100, grouping="greedy")
+        counts = connection_counts(tb)
+        e2 = level2_egress(tb)
+        elapsed = time.time() - t0
+        assert elapsed < 60.0, f"10k-device routing took {elapsed:.1f}s"
+        tb.validate()
+        assert counts.shape == (n,) and (counts >= 0).all()
+        assert np.isclose(e2.sum(), group_pair_traffic(tb).sum(), rtol=1e-9)
+        # Fig. 4's mechanism at scale: cross-group logical connections
+        # collapse to the (shared) bridge set
+        rows, cols = tm.rows(), tm.indices
+        cross = tb.group_of[rows] != tb.group_of[cols]
+        p2p_cross = np.bincount(rows[cross], minlength=n)
+        _, forward, aggregated = connection_components(tb)
+        assert (forward + aggregated).mean() < 0.5 * p2p_cross.mean()
+        # and the total is below the full P2P fan-out
+        assert counts.mean() < connection_counts(p2p_routing(tm, wg)).mean()
