@@ -22,7 +22,15 @@ from repro.core import (
 )
 from repro.snn import generate_brain_model
 
-__all__ = ["PaperScale", "build_setup", "build_device_traffic", "emit", "timed"]
+__all__ = [
+    "PaperScale",
+    "build_setup",
+    "build_device_traffic",
+    "emit",
+    "timed",
+    "start_capture",
+    "stop_capture",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,8 +84,27 @@ def build_device_traffic(bm, assign: np.ndarray, n_devices: int):
     return device_traffic_csr(bm.graph, assign, n_devices, sym_mode="both")
 
 
+# When non-None, every emit() is also appended here — the machine-readable
+# capture behind `benchmarks.run --json` (and the regression gate in CI).
+_capture: list[dict] | None = None
+
+
+def start_capture() -> None:
+    global _capture
+    _capture = []
+
+
+def stop_capture() -> list[dict]:
+    """Return the captured records and stop capturing."""
+    global _capture
+    out, _capture = _capture or [], None
+    return out
+
+
 def emit(name: str, value: float, derived: str = "") -> None:
     print(f"{name},{value},{derived}", flush=True)
+    if _capture is not None:
+        _capture.append({"name": name, "value": value, "derived": derived})
 
 
 def timed(fn, *args, **kw):

@@ -1,0 +1,88 @@
+"""Benchmark regression gate: compare a ``benchmarks.run --json`` output
+against the committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        --baseline benchmarks/baseline.json --new BENCH_<sha>.json
+
+``baseline.json`` pins the *deterministic* benchmark quantities (traffic
+peaks, message/byte counts, reduction factors — same seeds, same
+algorithms ⇒ same numbers on any machine) with a direction and a
+tolerance each.  Wall-clock metrics are recorded in the artifact but not
+pinned here: CI runner timing is too noisy to gate at 20%.
+
+Baseline entry format::
+
+    "metrics": {
+      "fig4/two_level_mean": {"value": 54.2, "direction": "lower", "tolerance": 0.2}
+    }
+
+``direction``: 'lower' (regression = value rises), 'higher' (regression
+= value falls), or 'near' (regression = drifts either way).  A metric
+worse than ``value`` by more than ``tolerance`` (relative), or missing
+from the new run, fails the gate (exit 1).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _to_float(v) -> float | None:
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return None
+
+
+def check(baseline: dict, new: dict) -> list[str]:
+    """Return a list of failure messages (empty = gate passes)."""
+    results = {r["name"]: _to_float(r["value"]) for r in new.get("results", [])}
+    failures = []
+    for name, spec in baseline.get("metrics", {}).items():
+        ref = float(spec["value"])
+        tol = float(spec.get("tolerance", 0.2))
+        direction = spec.get("direction", "near")
+        got = results.get(name)
+        if got is None:
+            failures.append(f"{name}: missing from the new run (baseline {ref})")
+            continue
+        scale = max(abs(ref), 1e-12)
+        rel = (got - ref) / scale
+        bad = (
+            rel > tol
+            if direction == "lower"
+            else rel < -tol
+            if direction == "higher"
+            else abs(rel) > tol
+        )
+        if bad:
+            failures.append(
+                f"{name}: {got:g} vs baseline {ref:g} "
+                f"({rel:+.1%}, direction={direction}, tolerance={tol:.0%})"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--new", required=True)
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    failures = check(baseline, new)
+    n = len(baseline.get("metrics", {}))
+    if failures:
+        print(f"BENCH REGRESSION: {len(failures)}/{n} gated metrics failed")
+        for msg in failures:
+            print(f"  {msg}")
+        return 1
+    print(f"bench gate OK: {n} metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

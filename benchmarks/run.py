@@ -1,16 +1,22 @@
 """Benchmark driver: one experiment per paper table/figure + framework
 benches.  Prints ``name,value,derived`` CSV lines.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--json out.json]
 
 ``--full`` uses paper-scale sizes (2,000 devices / 20k populations);
 the default is a reduced but structure-preserving configuration so the
 suite completes in a few minutes on CPU.
+
+``--json out.json`` additionally writes every emitted record plus
+per-section wall times as machine-readable JSON — the format CI uploads
+as ``BENCH_<sha>.json`` and gates with ``benchmarks.compare`` against
+``benchmarks/baseline.json``.
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import json
+import os
 import time
 
 
@@ -24,6 +30,7 @@ def main(argv=None):
         default="greedy",
         help="partitioner for the proposed rows/lines",
     )
+    ap.add_argument("--json", metavar="OUT", help="also write results as JSON")
     args = ap.parse_args(argv)
 
     if args.full:
@@ -33,6 +40,7 @@ def main(argv=None):
     size += ["--method", args.method]
 
     from benchmarks import (
+        common,
         fig3a_partition_traffic,
         fig3b_routing_traffic,
         fig4_connections,
@@ -40,23 +48,53 @@ def main(argv=None):
         hierarchical_a2a,
         kernel_bench,
         roofline_report,
+        snn_throughput,
     )
 
+    exec_flag = ["--skip-exec"] if args.skip_exec else []
+    sections = [
+        ("fig3a", fig3a_partition_traffic.main, size),
+        ("fig3b", fig3b_routing_traffic.main, size),
+        ("fig4", fig4_connections.main, size),
+        (
+            "table2",
+            table2_latency.main,
+            size + (["--scale2"] if args.full else []),
+        ),
+        ("a2a", hierarchical_a2a.main, exec_flag),
+        ("kernels", kernel_bench.main, [] if args.full else ["--small"]),
+        ("snn", snn_throughput.main, exec_flag),
+        ("roofline", roofline_report.main, []),
+    ]
+
+    if args.json:
+        common.start_capture()
     t0 = time.time()
+    section_wall: dict[str, float] = {}
     print("name,value,derived")
-    fig3a_partition_traffic.main(size)
-    fig3b_routing_traffic.main(size)
-    fig4_connections.main(size)
-    table2_latency.main(size + (["--scale2"] if args.full else []))
-    hierarchical_a2a.main(["--skip-exec"] if args.skip_exec else [])
-    kernel_bench.main([] if args.full else ["--small"])
-    roofline_report.main([])
-    import os
+    for name, fn, sargs in sections:
+        ts = time.time()
+        fn(sargs)
+        section_wall[name] = round(time.time() - ts, 2)
     if os.path.exists("benchmarks/results/dryrun_optimized.jsonl"):
         roofline_report.main(
             ["--path", "benchmarks/results/dryrun_optimized.jsonl", "--tag", "optimized"]
         )
-    print(f"total_wall_s,{time.time()-t0:.1f},")
+    total = time.time() - t0
+    print(f"total_wall_s,{total:.1f},")
+
+    if args.json:
+        payload = {
+            "schema": 1,
+            "sha": os.environ.get("GITHUB_SHA", ""),
+            "full": args.full,
+            "results": common.stop_capture(),
+            "section_wall_s": section_wall,
+            "total_wall_s": round(total, 1),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
 
 from repro.core import (
     ClusterModel,

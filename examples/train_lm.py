@@ -13,7 +13,6 @@ import sys
 sys.path.insert(0, "src")
 
 import argparse
-import dataclasses
 import time
 
 import jax

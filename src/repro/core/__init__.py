@@ -29,7 +29,9 @@ from repro.core.routing import (
     device_traffic_csr,
     level1_egress,
     level2_egress,
+    needed_sources,
     p2p_routing,
+    pool_block_mask,
     two_level_routing,
 )
 from repro.core.traffic import TrafficMatrix
@@ -68,6 +70,8 @@ __all__ = [
     "connection_counts",
     "level1_egress",
     "level2_egress",
+    "needed_sources",
+    "pool_block_mask",
     "ClusterModel",
     "LatencyBreakdown",
     "step_latency",

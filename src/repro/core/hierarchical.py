@@ -31,9 +31,8 @@ import functools
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 

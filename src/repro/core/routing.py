@@ -52,6 +52,8 @@ __all__ = [
     "level2_egress",
     "level1_egress",
     "group_pair_traffic",
+    "needed_sources",
+    "pool_block_mask",
 ]
 
 
@@ -436,6 +438,42 @@ def _select_bridges(
             np.empty(0, np.float64),
         )
     return bridge, share_coo
+
+
+def needed_sources(tb: RoutingTable) -> np.ndarray:
+    """``bool[N, N]`` — ``[src, dst]`` True when device ``dst`` consumes
+    device ``src``'s spikes according to the table's traffic.
+
+    The routing-table counterpart of nonzero incoming-weight columns: the
+    device traffic aggregates every synapse, so any (src → dst) synapse
+    implies a stored traffic entry and the mask is a safe superset of the
+    realized block structure.  The distributed engine's ``'sparse'``
+    exchange schedules its cross-group ``ppermute`` rounds from this (see
+    :func:`repro.snn.sparse.exchange_schedule`).
+    """
+    if _is_dense(tb):
+        mask = np.asarray(tb.device_traffic) > 0
+        out = mask.copy()
+        np.fill_diagonal(out, True)
+        return out
+    return tb.device_traffic.consumer_mask()
+
+
+def pool_block_mask(
+    mask: np.ndarray, group_of: np.ndarray, n_groups: int
+) -> np.ndarray:
+    """OR-aggregate a device-level block mask to group granularity.
+
+    ``out[gs, gd]`` is True when *any* device of group ``gd`` consumes a
+    block of any device in group ``gs`` — the level-2 exchange moves
+    group-aggregated blocks, so one consumer anywhere in the group forces
+    the whole transfer.  The diagonal is always True (level-1 territory).
+    """
+    src, dst = np.nonzero(np.asarray(mask, dtype=bool))
+    out = np.zeros((n_groups, n_groups), dtype=bool)
+    out[group_of[src], group_of[dst]] = True
+    np.fill_diagonal(out, True)
+    return out
 
 
 def p2p_routing(

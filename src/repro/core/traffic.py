@@ -84,6 +84,22 @@ class TrafficMatrix:
         out[self.rows(), self.indices] = self.data
         return out
 
+    def consumer_mask(self) -> np.ndarray:
+        """Dense ``bool[N, N]`` — ``mask[src, dst]`` is True when device
+        ``dst`` receives traffic from ``src`` (a stored entry), plus the
+        diagonal (a device always consumes its own spikes).
+
+        This is the "needed columns" export the distributed SNN engine
+        schedules its sparse spike exchange from: device ``dst`` only
+        needs the spike blocks of sources with ``mask[src, dst]``.  One
+        bool per device pair — fine up to tens of thousands of devices.
+        """
+        n = self.n_devices
+        out = np.zeros((n, n), dtype=bool)
+        out[self.rows(), self.indices] = True
+        np.fill_diagonal(out, True)
+        return out
+
     def transpose(self) -> "TrafficMatrix":
         return TrafficMatrix.from_coo(
             self.indices, self.rows(), self.data, self.n_devices

@@ -10,6 +10,7 @@ from repro.kernels.ops import (
     decode_attention,
     rglru,
     spike_currents,
+    spike_currents_blocks,
     ssd,
 )
 
@@ -20,4 +21,5 @@ __all__ = [
     "ssd",
     "rglru",
     "spike_currents",
+    "spike_currents_blocks",
 ]

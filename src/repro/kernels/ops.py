@@ -21,8 +21,17 @@ from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 from repro.kernels.rglru_scan import rglru_scan as _rglru
 from repro.kernels.spike_accum import spike_accum as _spike
+from repro.kernels.spike_accum import spike_accum_blocks as _spike_blocks
 
-__all__ = ["KernelPolicy", "attention", "decode_attention", "ssd", "rglru", "spike_currents"]
+__all__ = [
+    "KernelPolicy",
+    "attention",
+    "decode_attention",
+    "ssd",
+    "rglru",
+    "spike_currents",
+    "spike_currents_blocks",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +114,19 @@ def spike_currents(
     if policy.use_pallas:
         return _spike(spikes, w, interpret=policy.interpret)
     return _ref.spike_accum_ref(spikes, w)
+
+
+def spike_currents_blocks(
+    s_blocks: jax.Array,
+    src_ids: jax.Array,
+    blocks: jax.Array,
+    *,
+    policy: KernelPolicy = KernelPolicy(),
+) -> jax.Array:
+    """Block-CSR synaptic accumulation (the ``exchange='sparse'`` layout)."""
+    if policy.use_pallas:
+        return _spike_blocks(s_blocks, src_ids, blocks, interpret=policy.interpret)
+    return _ref.spike_accum_blocks_ref(s_blocks, src_ids, blocks)
 
 
 def _ssd_chunked_jnp(

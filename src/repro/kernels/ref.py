@@ -15,6 +15,7 @@ __all__ = [
     "ssd_ref",
     "rglru_ref",
     "spike_accum_ref",
+    "spike_accum_blocks_ref",
 ]
 
 
@@ -139,3 +140,14 @@ def rglru_ref(a: jax.Array, b: jax.Array) -> jax.Array:
 def spike_accum_ref(spikes: jax.Array, w: jax.Array) -> jax.Array:
     """I = s @ W."""
     return (spikes.astype(jnp.float32) @ w.astype(jnp.float32)).astype(jnp.float32)
+
+
+def spike_accum_blocks_ref(
+    s_blocks: jax.Array, src_ids: jax.Array, blocks: jax.Array
+) -> jax.Array:
+    """Block-CSR accumulation: ``I = Σ_k s_blocks[src_ids[k]] @ blocks[k]``."""
+    sel = s_blocks.astype(jnp.float32)[src_ids]  # [K, B]
+    return jnp.einsum(
+        "kb,kbj->j", sel, blocks.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )

@@ -30,7 +30,7 @@ import jax.experimental.pallas.tpu as pltpu
 
 from repro.compat import pallas_tpu_compiler_params
 
-__all__ = ["spike_accum"]
+__all__ = ["spike_accum", "spike_accum_blocks"]
 
 
 def _kernel(s_ref, w_ref, out_ref, acc_ref, *, n_i_blocks: int):
@@ -103,4 +103,85 @@ def spike_accum(
         ),
         interpret=interpret,
     )(s2, w)
+    return out[0]
+
+
+def _blocks_kernel(src_ref, s_ref, w_ref, out_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = s_ref[...]  # [1, B] — the spike block src_ids[k] (scalar-prefetch DMA)
+    # skip both silent source blocks and zero padding tiles
+    @pl.when(jnp.any(s > 0.0))
+    def _accumulate():
+        acc_ref[...] += jax.lax.dot_general(
+            s,
+            w_ref[0],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spike_accum_blocks(
+    s_blocks: jax.Array,
+    src_ids: jax.Array,
+    blocks: jax.Array,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Block-CSR synaptic accumulation — the ``'sparse'`` engine's hot-spot.
+
+    Computes ``I = Σ_k s_blocks[src_ids[k]] @ blocks[k]`` for one device's
+    stored incoming tiles (:meth:`repro.snn.sparse.BlockSynapses.padded`
+    layout, zero padding tiles allowed).  ``src_ids`` is scalar-prefetched
+    so each grid step DMAs exactly the spike block its tile consumes —
+    HBM traffic is O(nnzb · B), never O(M); the per-tile VPU check also
+    skips the MXU work for silent source blocks (same trick as
+    :func:`spike_accum`).
+
+    Args:
+      s_blocks: ``f32[n_blocks, B]`` global spike vector, one row per
+        source block (zeros where the exchange skipped a block).
+      src_ids: ``i32[K]`` source block per stored tile.
+      blocks: ``f32[K, B, Bj]`` the tiles (``Bj`` local output columns).
+
+    Returns:
+      ``f32[Bj]`` synaptic currents.
+    """
+    n_blocks, b = s_blocks.shape
+    k, bi, bj = blocks.shape
+    if bi != b or src_ids.shape != (k,):
+        raise ValueError(
+            f"blocks {blocks.shape} / src_ids {src_ids.shape} incompatible "
+            f"with s_blocks {s_blocks.shape}"
+        )
+    if k == 0:  # no tiles → no currents (a zero-size grid cannot run)
+        return jnp.zeros((bj,), jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, b), lambda i, src: (src[i], 0)),
+            pl.BlockSpec((1, bi, bj), lambda i, src: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bj), lambda i, src: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((1, bj), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_blocks_kernel, n_k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, bj), jnp.float32),
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(src_ids.astype(jnp.int32), s_blocks, blocks)
     return out[0]

@@ -29,7 +29,9 @@ def main():
     ap.add_argument("--populations", type=int, default=128)
     ap.add_argument("--neurons-per-pop", type=int, default=4)
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--exchange", choices=["flat", "two_level"], default="two_level")
+    ap.add_argument(
+        "--exchange", choices=["flat", "two_level", "sparse"], default="two_level"
+    )
     ap.add_argument("--noise", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

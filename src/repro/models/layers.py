@@ -10,7 +10,6 @@ fp32.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

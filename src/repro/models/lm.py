@@ -12,13 +12,11 @@ layer).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.sharding.policies import ShardingPolicy

@@ -22,10 +22,7 @@ Accounting conventions (documented in EXPERIMENTS.md):
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
-from typing import Any
 
 import numpy as np
 

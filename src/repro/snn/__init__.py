@@ -10,7 +10,13 @@ from repro.snn.neuron import (
     izhikevich_step,
     lif_step,
 )
-from repro.snn.engine import RunResult, SNNEngine, expand_synapses
+from repro.snn.engine import (
+    RunResult,
+    SNNEngine,
+    expand_synapses,
+    expand_synapses_sparse,
+)
+from repro.snn.sparse import BlockSynapses, exchange_schedule, exchange_volume
 from repro.snn.distributed import (
     DistributedSNN,
     group_mesh_permutation,
@@ -29,6 +35,10 @@ __all__ = [
     "SNNEngine",
     "RunResult",
     "expand_synapses",
+    "expand_synapses_sparse",
+    "BlockSynapses",
+    "exchange_schedule",
+    "exchange_volume",
     "DistributedSNN",
     "group_mesh_permutation",
     "partition_permutation",

@@ -9,25 +9,30 @@ per device, and the per-step spike exchange follows either
   joint mesh axes), or
 * ``exchange='two_level'`` — the paper's two-level routing: gather inside
   the group (level-1, fast axis), then one aggregated exchange across
-  groups (level-2, slow/pod axis) — ``repro.core.hierarchical``.
+  groups (level-2, slow/pod axis) — ``repro.core.hierarchical``, or
+* ``exchange='sparse'``    — the **routing-table-driven** exchange: the
+  block mask (nonzero incoming-weight tiles, or
+  :func:`repro.core.routing.needed_sources` from an Algorithm-2 table)
+  schedules masked ``ppermute`` rounds over the slow axis so only the
+  blocks somebody actually consumes ever move
+  (:mod:`repro.snn.sparse`).
 
-Both are numerically identical (same global spike vector arrives
-everywhere); what changes is the collective schedule — message counts
-and which links carry the bytes — exactly the paper's claim.  The
-*partition* additionally shrinks how much of the arriving spike vector
-each device actually consumes (nonzero weight columns), which the
-latency model and benchmarks account for.
+All three deliver the same effective global spike vector; what changes
+is the collective schedule — message counts, bytes, and which links
+carry them — exactly the paper's claim.  ``'flat'`` is kept as the dense
+oracle the sparse path is pinned against.
 
-Synaptic accumulation per device: ``I_loc = s_global @ W[:, local]``,
-i.e. each device holds the incoming-weight column block of the permuted
-synapse matrix — a dense MXU-friendly matmul (or the Pallas
-``spike_accum`` kernel).
+Synaptic accumulation per device: dense ``I_loc = s_global @ W[:, local]``
+(each device holds the incoming-weight column block of the permuted
+synapse matrix) for ``'flat'``/``'two_level'``; block-CSR
+``I_loc = Σ_k s_blk[src_ids[k]] @ blocks[k]`` for ``'sparse'`` (the
+Pallas counterpart is ``repro.kernels.spike_accum_blocks``) — the
+``[M, M]`` matrix is never materialized on that path.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +41,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 
+from repro.core.routing import pool_block_mask
+from repro.snn.sparse import BlockSynapses, exchange_schedule, exchange_volume
 from repro.snn.neuron import (
     IzhikevichParams,
     LIFParams,
@@ -94,22 +101,38 @@ class DistributedSNN:
     Attributes:
       mesh: device mesh; axis names e.g. ``("data",)`` or ``("pod", "data")``.
       w_syn: ``f32[M, M]`` *permuted* synapse matrix (Alg. 1 order).
+        Optional when ``syn`` is given and ``exchange='sparse'``.
       params: neuron model constants.
-      exchange: 'flat' | 'two_level' (two_level requires a 2-D mesh).
+      exchange: 'flat' | 'two_level' | 'sparse' (two_level requires a 2-D
+        mesh; sparse runs on 1-D and 2-D).
       i_ext: external drive.
+      syn: block-CSR synapse tiles (``exchange='sparse'``); derived from
+        ``w_syn`` when omitted.  ``syn.n_blocks`` must equal the device
+        count.
     """
 
     mesh: Mesh
-    w_syn: jax.Array
-    params: LIFParams | IzhikevichParams
+    w_syn: jax.Array | None = None
+    params: LIFParams | IzhikevichParams | None = None
     exchange: str = "flat"
     i_ext: float = 0.0
+    syn: BlockSynapses | None = None
 
     def __post_init__(self):
-        if self.exchange not in ("flat", "two_level"):
+        if self.params is None:
+            raise ValueError("params is required")
+        if self.exchange not in ("flat", "two_level", "sparse"):
             raise ValueError(self.exchange)
         if self.exchange == "two_level" and len(self.mesh.axis_names) < 2:
             raise ValueError("two_level exchange needs a 2-D mesh")
+        if self.w_syn is None and self.syn is None:
+            raise ValueError("need w_syn or syn")
+        if self.w_syn is None and self.exchange != "sparse":
+            raise ValueError(f"exchange={self.exchange!r} needs dense w_syn")
+        if self.syn is not None and self.syn.n_blocks != self.n_devices:
+            raise ValueError(
+                f"syn has {self.syn.n_blocks} blocks for {self.n_devices} devices"
+            )
 
     @property
     def axis_names(self) -> tuple[str, ...]:
@@ -119,13 +142,41 @@ class DistributedSNN:
     def n_devices(self) -> int:
         return int(np.prod([self.mesh.shape[a] for a in self.axis_names]))
 
+    def _mesh_groups(self) -> tuple[int, int]:
+        """``(G, R)``: slow-axis size and devices per group.  1-D meshes
+        treat every device as its own group (R = 1)."""
+        axes = self.axis_names
+        if len(axes) == 1:
+            return self.mesh.shape[axes[0]], 1
+        inner = int(np.prod([self.mesh.shape[a] for a in axes[1:]]))
+        return self.mesh.shape[axes[0]], inner
+
+    def _block_synapses(self) -> BlockSynapses:
+        if self.syn is not None:
+            return self.syn
+        return BlockSynapses.from_dense(np.asarray(self.w_syn), self.n_devices)
+
+    def exchange_stats(self) -> dict[str, int]:
+        """Per-step slow-axis receive volume (bytes): the dense schedule
+        vs the block-mask-driven one this engine would run with
+        ``exchange='sparse'``."""
+        syn = self._block_synapses()
+        g, r = self._mesh_groups()
+        return exchange_volume(
+            syn.mask(),
+            mesh_shape=(g, r) if len(self.axis_names) > 1 else (g,),
+            block_bytes=syn.block_size * 4,
+        )
+
     def run(self, n_steps: int, *, key: jax.Array | None = None) -> jax.Array:
         """Simulate; returns the global spike raster ``[T, M]``."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        if self.exchange == "sparse":
+            return self._run_sparse(n_steps, key=key)
         m = self.w_syn.shape[0]
         n_dev = self.n_devices
         if m % n_dev:
             raise ValueError("neuron count must divide the device count")
-        key = jax.random.PRNGKey(0) if key is None else key
         axes = self.axis_names
         step = lif_step if isinstance(self.params, LIFParams) else izhikevich_step
         params = self.params
@@ -145,7 +196,7 @@ class DistributedSNN:
         @functools.partial(
             shard_map,
             mesh=self.mesh,
-            in_specs=(vec_spec, vec_spec, P(axes[-1]), col_spec),
+            in_specs=(vec_spec, vec_spec, P(axes), col_spec),
             out_specs=P(None, axes),
             check_vma=False,
         )
@@ -168,11 +219,112 @@ class DistributedSNN:
             )
             return raster  # [T, n_loc] per device → [T, M] stitched
 
-        # per-device RNG derived from the base key and device position
-        keys = jax.random.split(key, self.mesh.shape[axes[-1]])
+        # per-device RNG: one key per device, sharded over the full mesh
+        # (splitting over the last axis only would hand slow-axis replicas
+        # identical noise streams)
+        keys = jax.random.split(key, n_dev)
         st0 = init_state(m, params, key)
         sharding = NamedSharding(self.mesh, vec_spec)
         v0 = jax.device_put(st0.v, sharding)
         u0 = jax.device_put(st0.u, sharding)
+        keys = jax.device_put(keys, NamedSharding(self.mesh, P(axes)))
         w = jax.device_put(self.w_syn, NamedSharding(self.mesh, col_spec))
         return jax.jit(_run)(v0, u0, keys, w)
+
+    def _run_sparse(self, n_steps: int, *, key: jax.Array) -> jax.Array:
+        """Masked block exchange + block-CSR accumulation.
+
+        Level-1 (fast axes) gathers the group spike block as in
+        ``'two_level'``; level-2 runs only the ``ppermute`` rounds the
+        group-pooled block mask schedules — unneeded group blocks never
+        cross the slow axis (their receive slots stay zero, and the
+        block-CSR storage holds no tile for them, so the raster is
+        identical to the dense oracle).  All shapes and the schedule are
+        static; the mask is data-independent (derived from the synapse
+        tiles / routing table at trace time).
+        """
+        syn = self._block_synapses()
+        n_dev = self.n_devices
+        m = syn.n_neurons
+        b = syn.block_size
+        axes = self.axis_names
+        g, r = self._mesh_groups()
+        slow, inner = axes[0], axes[1:]
+        gmask = pool_block_mask(syn.mask(), np.arange(n_dev) // r, g)
+        rounds = exchange_schedule(gmask)
+        src_pad, blk_pad = syn.padded()  # [n_dev, K], [n_dev, K, B, B]
+
+        step = lif_step if isinstance(self.params, LIFParams) else izhikevich_step
+        params = self.params
+        i_ext = jnp.float32(self.i_ext)
+        vec_spec = P(axes)
+        blk_spec = P(axes)  # tile arrays sharded over their leading dim
+
+        def gather_blocks(spikes_loc):
+            """[B] local spikes → [n_dev, B] global blocks (zeros where
+            the schedule skipped the transfer)."""
+            if r > 1:
+                s_grp = jax.lax.all_gather(spikes_loc, inner, axis=0, tiled=True)
+            else:
+                s_grp = spikes_loc  # [R·B] group spike block
+            gid = jax.lax.axis_index(slow)
+            buf = jnp.zeros((g, r * b), jnp.float32)
+            buf = buf.at[gid].set(s_grp)
+            for shift, pairs in enumerate(rounds, start=1):
+                if not pairs:
+                    continue
+                recv = jax.lax.ppermute(s_grp, slow, perm=pairs)
+                # whatever arrived in the shift-`shift` round came from
+                # group (gid - shift); untargeted receivers got zeros and
+                # write zeros into an otherwise-untouched slot
+                buf = buf.at[(gid - shift) % g].set(recv)
+            return buf.reshape(n_dev, b)
+
+        @functools.partial(
+            shard_map,
+            mesh=self.mesh,
+            in_specs=(vec_spec, vec_spec, P(axes), blk_spec, blk_spec),
+            out_specs=P(None, axes),
+            check_vma=False,
+        )
+        def _run(v0, u0, keys, src_ids, blocks):
+            state = NeuronState(v=v0, u=u0, key=keys[0])
+            src_ids_loc = src_ids[0]  # [K]
+            blocks_loc = blocks[0]  # [K, B, B]
+            n_loc = v0.shape[0]
+
+            def body(carry, _):
+                state, prev_loc = carry
+                s_blocks = gather_blocks(prev_loc)
+                sel = s_blocks[src_ids_loc]  # [K, B]
+                i_syn = (
+                    jnp.einsum(
+                        "kb,kbj->j",
+                        sel,
+                        blocks_loc,
+                        preferred_element_type=jnp.float32,
+                    )
+                    + i_ext
+                )
+                state, spikes = step(state, i_syn, params)
+                return (state, spikes), spikes
+
+            (_, _), raster = jax.lax.scan(
+                body,
+                (state, jnp.zeros((n_loc,), jnp.float32)),
+                None,
+                length=n_steps,
+            )
+            return raster
+
+        # one key per device over the full mesh (see the dense path)
+        keys = jax.random.split(key, n_dev)
+        st0 = init_state(m, params, key)
+        sharding = NamedSharding(self.mesh, vec_spec)
+        v0 = jax.device_put(st0.v, sharding)
+        u0 = jax.device_put(st0.u, sharding)
+        keys = jax.device_put(keys, NamedSharding(self.mesh, P(axes)))
+        blk_sharding = NamedSharding(self.mesh, blk_spec)
+        src_arr = jax.device_put(jnp.asarray(src_pad), blk_sharding)
+        blk_arr = jax.device_put(jnp.asarray(blk_pad), blk_sharding)
+        return jax.jit(_run)(v0, u0, keys, src_arr, blk_arr)

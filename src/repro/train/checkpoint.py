@@ -14,7 +14,6 @@ the target sharding.  Async: ``save_async`` snapshots to host memory
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil

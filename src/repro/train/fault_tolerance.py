@@ -24,7 +24,6 @@ import dataclasses
 import time
 from typing import Any, Callable
 
-import jax
 import numpy as np
 
 from repro.train import checkpoint as ckpt_mod

@@ -14,8 +14,7 @@ of per-layer chatter; §Perf compares this against ``fsdp_over_pod``.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -11,6 +11,8 @@ hypothesis, never broken.
 """
 from __future__ import annotations
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:  # pragma: no cover - exercised when hypothesis is installed
     from hypothesis import given, settings
     from hypothesis import strategies as st

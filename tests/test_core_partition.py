@@ -2,12 +2,10 @@
 from __future__ import annotations
 
 import numpy as np
-import pytest
 from tests._hypothesis_compat import given, settings, st
 
 from repro.core import (
     build_graph,
-    cut_traffic,
     from_dense,
     genetic_partition,
     greedy_partition,

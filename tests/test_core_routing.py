@@ -3,11 +3,9 @@ analytic latency model."""
 from __future__ import annotations
 
 import numpy as np
-import pytest
 from tests._hypothesis_compat import given, settings, st
 
 from repro.core import (
-    ClusterModel,
     connection_counts,
     device_graph,
     greedy_partition,

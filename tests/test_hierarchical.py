@@ -3,7 +3,6 @@ collectives (8 fake host devices via subprocess) + analytic accounting."""
 from __future__ import annotations
 
 import numpy as np
-import pytest
 
 from repro.core.hierarchical import (
     dispatch_bytes,

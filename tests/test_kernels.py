@@ -1,7 +1,6 @@
 """Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

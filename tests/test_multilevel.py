@@ -17,7 +17,6 @@ from __future__ import annotations
 import time
 
 import numpy as np
-import pytest
 
 from tests._hypothesis_compat import given, settings, st
 
@@ -26,7 +25,6 @@ from repro.core import (
     cut_traffic,
     device_graph,
     greedy_partition,
-    imbalance,
     multilevel_partition,
     p2p_routing,
     planted_partition_graph,

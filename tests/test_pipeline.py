@@ -1,7 +1,6 @@
 """GPipe pipeline parallelism: equivalence with sequential execution."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.sharding.pipeline import bubble_fraction
 from tests.conftest import run_devices

@@ -4,8 +4,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.roofline.analysis import V5E, model_flops, roofline
 from repro.roofline.hlo import HloTotals, analyze, parse_module

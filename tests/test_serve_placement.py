@@ -3,13 +3,11 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-import pytest
 from tests._hypothesis_compat import given, settings, st
 
 from repro.configs import ARCHS
 from repro.core.placement import (
     contiguous_placement,
-    dispatch_traffic,
     place_experts,
     random_placement,
 )
