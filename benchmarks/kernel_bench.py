@@ -50,7 +50,11 @@ def main(argv=None):
     np.testing.assert_allclose(
         np.asarray(fa), np.asarray(R.attention_ref(q, k, v, causal=True)), rtol=5e-3, atol=5e-3
     )
-    emit("kernel/flash_attention_vmem_kib", round((128 * 64 + 2 * 128 * 128 + 128 * 64 * 3) * 4 / 1024, 1), "Bq=Bk=128 tiles")
+    emit(
+        "kernel/flash_attention_vmem_kib",
+        round((128 * 64 + 2 * 128 * 128 + 128 * 64 * 3) * 4 / 1024, 1),
+        "Bq=Bk=128 tiles",
+    )
 
     # decode attention
     qd = jnp.asarray(rng.normal(size=(4, 8, 64)), jnp.float32)
@@ -71,7 +75,9 @@ def main(argv=None):
     t_ref = _time(lambda: R.ssd_ref(x, a, b, c))
     emit("kernel/ssd_ref_us", round(t_ref * 1e6, 1), "")
     sd = ssd_scan(x, a, b, c, chunk=128, interpret=True)
-    np.testing.assert_allclose(np.asarray(sd), np.asarray(R.ssd_ref(x, a, b, c)), rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(
+        np.asarray(sd), np.asarray(R.ssd_ref(x, a, b, c)), rtol=5e-3, atol=5e-3
+    )
 
     # rglru
     ar = jnp.asarray(rng.uniform(0.9, 0.999, size=(2, s, 128)), jnp.float32)
@@ -79,7 +85,9 @@ def main(argv=None):
     t_ref = _time(lambda: R.rglru_ref(ar, br))
     emit("kernel/rglru_ref_us", round(t_ref * 1e6, 1), "")
     rg = rglru_scan(ar, br, chunk=128, block_d=128, interpret=True)
-    np.testing.assert_allclose(np.asarray(rg), np.asarray(R.rglru_ref(ar, br)), rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(
+        np.asarray(rg), np.asarray(R.rglru_ref(ar, br)), rtol=5e-3, atol=5e-3
+    )
 
     # spike accumulation (the paper's hot-spot) at 1% firing
     m, n = 2048, 1024

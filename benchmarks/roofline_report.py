@@ -34,7 +34,8 @@ def table(rows: list[dict]) -> str:
     for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
         if r["status"] == "skipped":
             lines.append(
-                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | skipped | — | — | — |"
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                "| — | — | — | skipped | — | — | — |"
             )
             continue
         if r["status"] != "ok":
@@ -94,7 +95,11 @@ def main(argv=None):
             f"{worst['roofline']['roofline_fraction']:.2%}",
         )
     for r in err:
-        emit(f"dryrun[{tag}]/error_cell", f"{r['arch']}×{r['shape']}×{r['mesh']}", r.get("error", "")[:120])
+        emit(
+            f"dryrun[{tag}]/error_cell",
+            f"{r['arch']}×{r['shape']}×{r['mesh']}",
+            r.get("error", "")[:120],
+        )
 
 
 if __name__ == "__main__":

@@ -1,17 +1,21 @@
-"""SNN engine throughput + exchanged-byte accounting: flat vs sparse.
+"""SNN engine throughput + exchanged-byte accounting: flat vs sparse vs
+ragged.
 
-The tentpole claim of the sparse spike exchange: on a clustered brain
-model the routing-aware schedule moves strictly fewer bytes across the
-slow mesh axis than the flat all-gather, at the same raster.  Two
-measurements:
+The tentpole claim of the routing-aware spike exchange, in two rungs: on
+a clustered brain model the *sparse* schedule moves strictly fewer bytes
+across the slow mesh axis than the flat all-gather, and the *ragged*
+schedule (bridge-compacted, column-pruned payloads — the Algorithm-2
+bridge applied to the simulation loop) strictly fewer than sparse, all
+at the same raster.  Two measurements:
 
   1. Deterministic: block-mask density and per-step slow-axis receive
-     volume (``exchange_volume``) for the flat vs sparse schedules on a
-     1-D and a 2-D mesh — these feed the CI regression gate.
+     volume (``exchange_volume`` with a ``RaggedPlan``) for the flat vs
+     sparse vs ragged schedules on a 1-D and a 2-D mesh — these feed the
+     CI regression gate.
   2. Executable: an 8-host-device subprocess runs the distributed engine
-     with ``exchange='flat'`` and ``'sparse'`` on the same model, asserts
-     raster equality, and times steps/s (reported, not gated — CI wall
-     clocks are noisy).
+     with ``exchange='flat'``, ``'sparse'`` and ``'ragged'`` on the same
+     model, asserts raster equality, and times steps/s (reported, not
+     gated — CI wall clocks are noisy).
 """
 from __future__ import annotations
 
@@ -40,6 +44,8 @@ engines = {
                            params=params, exchange="flat", i_ext=4.0),
     "sparse": DistributedSNN(mesh=mesh, params=params, exchange="sparse",
                              i_ext=4.0, syn=syn),
+    "ragged": DistributedSNN(mesh=mesh, params=params, exchange="ragged",
+                             i_ext=4.0, syn=syn),
 }
 rasters = {}
 for name, eng in engines.items():
@@ -50,6 +56,7 @@ for name, eng in engines.items():
     dt = time.perf_counter() - t0
     print(f"steps_per_s_{name},{steps / dt:.1f}")
 np.testing.assert_allclose(np.asarray(rasters["flat"]), np.asarray(rasters["sparse"]))
+np.testing.assert_allclose(np.asarray(rasters["flat"]), np.asarray(rasters["ragged"]))
 print("rasters_equal,1")
 """
 
@@ -66,7 +73,12 @@ def main(argv=None):
     ap.add_argument("--method", default="greedy")
     args, _ = ap.parse_known_args(argv)
 
-    from repro.snn import exchange_volume, expand_synapses_sparse, generate_brain_model
+    from repro.snn import (
+        build_ragged_plan,
+        exchange_volume,
+        expand_synapses_sparse,
+        generate_brain_model,
+    )
 
     bm = generate_brain_model(
         n_populations=args.populations,
@@ -79,17 +91,33 @@ def main(argv=None):
     )
     emit("snn/block_density", round(syn.density, 4), f"{args.devices} blocks")
     blk_bytes = syn.block_size * 4
-    v1 = exchange_volume(syn.mask(), block_bytes=blk_bytes)
+    plan1 = build_ragged_plan(syn, (args.devices, 1))
+    v1 = exchange_volume(syn.mask(), block_bytes=blk_bytes, plan=plan1)
     emit("snn/bytes_flat_1d", v1["flat"], "per step, slow axis")
     emit("snn/bytes_sparse_1d", v1["sparse"], "per step, slow axis")
+    emit("snn/bytes_ragged_1d", v1["ragged"], "per step, slow axis")
     g = args.devices // 4
-    v2 = exchange_volume(syn.mask(), mesh_shape=(g, 4), block_bytes=blk_bytes)
+    plan2 = build_ragged_plan(syn, (g, 4))
+    v2 = exchange_volume(
+        syn.mask(), mesh_shape=(g, 4), block_bytes=blk_bytes, plan=plan2
+    )
     emit("snn/bytes_flat_2d", v2["flat"], f"({g},4) mesh level-2")
     emit("snn/bytes_sparse_2d", v2["sparse"], f"({g},4) mesh level-2")
+    emit("snn/bytes_ragged_2d", v2["ragged"], f"({g},4) mesh level-2")
     emit(
         "snn/bytes_reduction_1d",
         round(v1["flat"] / max(v1["sparse"], 1), 2),
         "flat / sparse",
+    )
+    emit(
+        "snn/ragged_vs_sparse_1d",
+        round(v1["sparse"] / max(v1["ragged"], 1), 2),
+        "sparse / ragged",
+    )
+    emit(
+        "snn/ragged_vs_sparse_2d",
+        round(v2["sparse"] / max(v2["ragged"], 1), 2),
+        "sparse / ragged",
     )
 
     if not args.skip_exec:

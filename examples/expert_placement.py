@@ -56,6 +56,9 @@ for two in (False, True):
     b = dispatch_bytes(2, 256, chunk, two_level=two)
     print(f"{tag}: cross-pod msgs/exchange = {m['cross_pod']:7d}   "
           f"cross-pod bytes = {b['cross_pod']:.2e}")
-red = dispatch_messages(2, 256, two_level=False)["cross_pod"] / dispatch_messages(2, 256, two_level=True)["cross_pod"]
+red = (
+    dispatch_messages(2, 256, two_level=False)["cross_pod"]
+    / dispatch_messages(2, 256, two_level=True)["cross_pod"]
+)
 print(f"\nbridge aggregation: {red:.0f}× fewer cross-pod messages, equal bytes")
 print("(the paper's Fig. 4 claim — 1,552 → 88 connections — restated for TPU)")

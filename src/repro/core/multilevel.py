@@ -41,6 +41,7 @@ from repro.core.partition import (
     rebalance_csr,
     refine_sweep_csr,
     refine_sweep_csr_seq,
+    swap_sweep_csr_seq,
 )
 
 __all__ = ["multilevel_partition", "coarsen_graph", "heavy_edge_matching"]
@@ -274,7 +275,12 @@ def multilevel_partition(
     init = min(
         (
             greedy_partition(
-                cg, n_parts, itermax=itermax, balance_slack=balance_slack, seed=s
+                cg,
+                n_parts,
+                itermax=itermax,
+                balance_slack=balance_slack,
+                seed=s,
+                swap_moves=False,  # coarse seed only; see greedy_partition
             )
             for s in range(seed, seed + 3)
         ),
@@ -293,12 +299,19 @@ def multilevel_partition(
             level.indptr, level.indices, level.tval, level.w, assign, n_parts, cap
         )
         args = (level.indptr, level.indices, level.tval, level.w, assign, n_parts, cap)
+        # Balanced pair-swaps escape the fixed points single moves cannot
+        # leave (transposed community members) — but only on the finest
+        # level, where a swap improves the *true* objective; escaping a
+        # coarse-level optimum merely perturbs the uncoarsening
+        # trajectory, which is not monotone in the final cut.
+        finest = level is levels[0]
         for _ in range(refine_sweeps):
             if refine_sweep_csr(*args) == 0:
                 # The independent-set sweep is stuck in a local optimum;
                 # one exact sequential pass lets adjacent moves cascade.
                 if refine_sweep_csr_seq(*args) == 0:
-                    break
+                    if not finest or swap_sweep_csr_seq(*args) == 0:
+                        break
         history.append(level.cut(assign))
     res = _result(g, assign, n_parts, tuple(history), "multilevel")
     if compare_greedy is None:

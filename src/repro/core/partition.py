@@ -42,6 +42,7 @@ __all__ = [
     "refine_partition",
     "refine_sweep_csr",
     "refine_sweep_csr_seq",
+    "swap_sweep_csr_seq",
     "rebalance_csr",
 ]
 
@@ -147,6 +148,7 @@ def greedy_partition(
     itermax: int = 8,
     balance_slack: float = 0.05,
     seed: int = 0,
+    swap_moves: bool = True,
 ) -> PartitionResult:
     """The paper's Algorithm 1.
 
@@ -156,6 +158,12 @@ def greedy_partition(
       itermax: the paper's ``T`` — refinement sweeps after the greedy growth.
       balance_slack: admissible relative overshoot of the average load.
       seed: RNG seed for seeding the growth fronts.
+      swap_moves: allow balanced pair-swaps once single moves are
+        exhausted (:func:`swap_sweep_csr_seq`) — needed to recover
+        communities whose members got transposed between full parts.
+        The multilevel coarsest-level init disables them (a coarse seed
+        only needs to be cheap, and swaps there perturb the uncoarsening
+        trajectory non-monotonically).
 
     Returns:
       :class:`PartitionResult` with the neuron→GPU mapping ``PM``.
@@ -255,7 +263,7 @@ def greedy_partition(
     best = assign.copy()
     best_cut = history[0]
     for _ in range(itermax):
-        moved = _refine_sweep(g, assign, n, cap)
+        moved = _refine_sweep(g, assign, n, cap, swap_moves=swap_moves)
         cur = cut_traffic(g, assign)
         history.append(cur)
         if cur < best_cut:
@@ -266,7 +274,12 @@ def greedy_partition(
 
 
 def _refine_sweep(
-    g: CommGraph, assign: np.ndarray, n_parts: int, cap: float
+    g: CommGraph,
+    assign: np.ndarray,
+    n_parts: int,
+    cap: float,
+    *,
+    swap_moves: bool = True,
 ) -> int:
     """One FM-style boundary sweep: move vertices to their best part when it
     reduces cut traffic and respects the balance cap.  Mutates ``assign``;
@@ -283,6 +296,13 @@ def _refine_sweep(
     )
     if moved == 0:
         moved = refine_sweep_csr_seq(
+            g.indptr, g.indices, et, g.weights, assign, n_parts, cap
+        )
+    if moved == 0 and swap_moves:
+        # Single moves are exhausted (often because any move would break
+        # balance); balanced pair-swaps can still escape — e.g. planted
+        # size-2 communities with two vertices transposed.
+        moved = swap_sweep_csr_seq(
             g.indptr, g.indices, et, g.weights, assign, n_parts, cap
         )
     return moved
@@ -402,6 +422,159 @@ def refine_sweep_csr_seq(
     return moved
 
 
+#: Partner candidates examined per (source part, target part) pair in
+#: :func:`swap_sweep_csr_seq`.  Truncation only bounds the scan — every
+#: applied swap's gain is still verified exactly — so K trades escape
+#: coverage for a hard O(boundary · K) sweep cost.
+SWAP_CANDIDATES = 8
+
+
+def swap_sweep_csr_seq(
+    indptr: np.ndarray,
+    indices: np.ndarray,
+    et: np.ndarray,
+    w: np.ndarray,
+    assign: np.ndarray,
+    n_parts: int,
+    cap: float,
+) -> int:
+    """Balanced pair-swap sweep (the KL move the single-vertex sweeps lack).
+
+    A single move out of a full part breaks the balance cap, so planted
+    communities whose members got transposed between two parts are a
+    fixed point of :func:`refine_sweep_csr`/`_seq` — the classic failure
+    on size-2 communities (ROADMAP).  Swapping ``v ∈ p`` with ``u ∈ q``
+    keeps both loads within cap whenever ``|w[v] − w[u]|`` fits, and its
+    exact cut gain is
+
+        ``(aff_v[q] − aff_v[p]) + (aff_u[p] − aff_u[q]) − 2·t(v, u)``
+
+    (the ``t(v, u)`` edge, if any, is cut before *and* after the swap,
+    but both affinity terms would count it as gained).
+
+    For each boundary vertex ``v`` and each adjacent external part ``q``
+    the sweep consults two precomputed candidate indexes (vectorized
+    segmented reductions — no per-vertex part scan, which made the naive
+    version quadratic and unusable at multilevel scale): the top
+    :data:`SWAP_CANDIDATES` boundary members of ``q`` by snapshot
+    out-gain toward ``p``, and the :data:`SWAP_CANDIDATES` members of
+    ``q`` cheapest to evict (lowest internal affinity — the partner a
+    scrambled start needs even when it has no edge toward ``p``).  The
+    best candidate's gain is evaluated exactly (including the
+    ``−2·t(v, u)`` correction and both balance caps) before applying;
+    vertices adjacent to an applied swap are skipped for the rest of the
+    sweep so every applied gain stays exact against the snapshot and the
+    cut is strictly decreasing.  For parts no larger than K the
+    candidate set degenerates to *all* members — the exhaustive sweep —
+    while large instances stay bounded at O(E log E) preprocessing +
+    O(adjacent-part pairs · K) evaluations.
+
+    Requires CSR column indices sorted within each row (what
+    :func:`repro.core.graph.build_graph` and the multilevel contraction
+    produce — checked, since ``CommGraph.validate()`` does not enforce
+    it).  Mutates ``assign``; returns the number of swaps applied.
+    """
+    m = indptr.shape[0] - 1
+    rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(indptr))
+    if indices.size > 1:
+        same_row = rows[1:] == rows[:-1]
+        if np.any(same_row & (np.diff(indices) <= 0)):
+            raise ValueError("CSR indices must be sorted within rows")
+    nbr_part = assign[indices]
+    boundary = np.unique(rows[assign[rows] != nbr_part])
+    if boundary.size == 0:
+        return 0
+    load = np.bincount(assign, weights=w, minlength=n_parts)
+    # Vertex→part affinities from one segmented reduction (snapshot).
+    key = rows * n_parts + nbr_part
+    order = np.argsort(key, kind="stable")
+    ks = key[order]
+    starts = np.flatnonzero(np.r_[True, ks[1:] != ks[:-1]])
+    aff_val = np.add.reduceat(et[order], starts)
+    aff_v = ks[starts] // n_parts
+    aff_p = ks[starts] % n_parts
+    # Per-vertex slices into the (aff_v, aff_p, aff_val) arrays.
+    vptr = np.searchsorted(aff_v, np.arange(m + 1))
+    own_aff = np.zeros(m)
+    own_sel = aff_p == assign[aff_v]
+    own_aff[aff_v[own_sel]] = aff_val[own_sel]
+
+    def aff(v: int, p: int) -> float:
+        lo, hi = vptr[v], vptr[v + 1]
+        i = lo + np.searchsorted(aff_p[lo:hi], p)
+        return float(aff_val[i]) if i < hi and aff_p[i] == p else 0.0
+
+    def edge(v: int, u: int) -> float:
+        lo, hi = indptr[v], indptr[v + 1]
+        i = lo + np.searchsorted(indices[lo:hi], u)
+        return float(et[i]) if i < hi and indices[i] == u else 0.0
+
+    # Candidate index: for every ordered part pair (q → p), the top-K
+    # boundary vertices u ∈ q by snapshot out-gain aff_u(p) − aff_u(q).
+    is_boundary = np.zeros(m, dtype=bool)
+    is_boundary[boundary] = True
+    ext = is_boundary[aff_v] & ~own_sel
+    u_e = aff_v[ext]
+    pair_e = assign[u_e] * n_parts + aff_p[ext]
+    gain_e = aff_val[ext] - own_aff[u_e]
+    order2 = np.lexsort((-gain_e, pair_e))
+    pair_sorted = pair_e[order2]
+    cand_u = u_e[order2]
+    gstart = np.flatnonzero(np.r_[True, pair_sorted[1:] != pair_sorted[:-1]])
+    pair_ids = pair_sorted[gstart]
+    gend = np.r_[gstart[1:], pair_sorted.size]
+
+    # Eviction index: per part, the K members cheapest to give up
+    # (lowest internal affinity) — partners worth taking even when they
+    # have no affinity toward the vertex's own part.
+    evict_order = np.lexsort((own_aff, assign))
+    evict_part = assign[evict_order]
+    estart = np.searchsorted(evict_part, np.arange(n_parts + 1))
+
+    def _candidates(q: int, p: int) -> list[int]:
+        out = evict_order[estart[q] : min(estart[q] + SWAP_CANDIDATES, estart[q + 1])].tolist()
+        gi = int(np.searchsorted(pair_ids, q * n_parts + p))
+        if gi < pair_ids.size and pair_ids[gi] == q * n_parts + p:
+            sl = slice(
+                int(gstart[gi]), min(int(gstart[gi]) + SWAP_CANDIDATES, int(gend[gi]))
+            )
+            out += cand_u[sl].tolist()
+        return out
+
+    dirty = np.zeros(m, dtype=bool)
+    swaps = 0
+    for v in boundary.tolist():
+        if dirty[v]:
+            continue
+        p = int(assign[v])
+        lo, hi = vptr[v], vptr[v + 1]
+        cand_parts = aff_p[lo:hi][np.argsort(-aff_val[lo:hi], kind="stable")]
+        best = (1e-12, -1, -1)  # (gain, u, q)
+        for q in cand_parts.tolist():
+            if q == p:
+                continue
+            gain_v = aff(v, q) - own_aff[v]
+            for u in _candidates(q, p):
+                if u == v or dirty[u] or assign[u] != q:
+                    continue
+                if load[p] - w[v] + w[u] > cap or load[q] - w[u] + w[v] > cap:
+                    continue
+                gain = gain_v + aff(u, p) - aff(u, q) - 2.0 * edge(v, u)
+                if gain > best[0]:
+                    best = (gain, u, q)
+        _, u, q = best
+        if u >= 0:
+            load[p] += w[u] - w[v]
+            load[q] += w[v] - w[u]
+            assign[v], assign[u] = q, p
+            # snapshot gains of neighbors (and the pair) are now stale
+            dirty[v] = dirty[u] = True
+            dirty[indices[indptr[v] : indptr[v + 1]]] = True
+            dirty[indices[indptr[u] : indptr[u + 1]]] = True
+            swaps += 1
+    return swaps
+
+
 def rebalance_csr(
     indptr: np.ndarray,
     indices: np.ndarray,
@@ -510,6 +683,39 @@ def _fitness(
     return cut_traffic(g, assign) * (1.0 + lam * imbalance(g, assign, n_parts))
 
 
+def _repair_empty_parts(
+    g: CommGraph, assign: np.ndarray, n_parts: int
+) -> np.ndarray:
+    """Make every part non-empty with minimum-cut-increase donor moves.
+
+    Random-reset mutation and uniform crossover can leave GA chromosomes
+    with empty parts (the fitness only *penalizes* imbalance, it does not
+    forbid it), and an empty group later breaks Algorithm-2's
+    ``RoutingTable.validate()`` — an empty group has no member to serve
+    as bridge.  For each empty part the heaviest-loaded donor part
+    (ties: lowest part index) gives up its vertex with the least
+    affinity to the donor's other members.  Mutates and returns
+    ``assign``.
+    """
+    rows = g.rows()
+    et = g.edge_traffic()
+    counts = np.bincount(assign, minlength=n_parts)
+    for p in np.flatnonzero(counts == 0).tolist():
+        load = np.bincount(assign, weights=g.weights, minlength=n_parts)
+        load[counts <= 1] = -np.inf  # a donor must keep ≥ 1 vertex
+        donor = int(np.argmax(load))
+        members = np.flatnonzero(assign == donor)
+        own_edge = (assign[rows] == donor) & (assign[g.indices] == donor)
+        internal = np.bincount(
+            rows[own_edge], weights=et[own_edge], minlength=g.num_vertices
+        )
+        v = int(members[np.argmin(internal[members])])
+        assign[v] = p
+        counts[donor] -= 1
+        counts[p] += 1
+    return assign
+
+
 def genetic_partition(
     g: CommGraph,
     n_parts: int,
@@ -552,6 +758,10 @@ def genetic_partition(
         fits = np.array([_fitness(g, a, n_parts, lam) for a in pop])
         history.append(float(fits.min()))
     best = pop[int(np.argmin(fits))]
+    if n_parts <= m:
+        # GA chromosomes may leave parts empty; downstream consumers
+        # (Algorithm-2 bridge selection) need every part inhabited.
+        best = _repair_empty_parts(g, best, n_parts)
     return _result(g, best, n_parts, tuple(history), "genetic")
 
 

@@ -53,6 +53,7 @@ __all__ = [
     "level1_egress",
     "group_pair_traffic",
     "needed_sources",
+    "payload_widths",
     "pool_block_mask",
 ]
 
@@ -457,6 +458,21 @@ def needed_sources(tb: RoutingTable) -> np.ndarray:
         np.fill_diagonal(out, True)
         return out
     return tb.device_traffic.consumer_mask()
+
+
+def payload_widths(tb: RoutingTable, block_size: int) -> np.ndarray:
+    """``int64[N, N]`` per-pair spike-payload widths implied by the table.
+
+    The width counterpart of :func:`needed_sources`: every consumed pair
+    carries the full ``block_size`` lanes, because device-level traffic
+    cannot resolve *which* columns a destination consumes — a safe
+    superset.  The ragged exchange planner
+    (:func:`repro.snn.ragged.build_ragged_plan`) prunes below these
+    widths when the realized synapse tiles are available.
+    """
+    if _is_dense(tb):
+        return needed_sources(tb).astype(np.int64) * int(block_size)
+    return tb.device_traffic.payload_widths(block_size)
 
 
 def pool_block_mask(

@@ -100,6 +100,20 @@ class TrafficMatrix:
         np.fill_diagonal(out, True)
         return out
 
+    def payload_widths(self, block_size: int) -> np.ndarray:
+        """``int64[N, N]`` per-pair spike-payload widths (f32 lanes).
+
+        ``widths[src, dst]`` is how many of source ``src``'s spike-block
+        columns destination ``dst`` may consume.  Device traffic carries
+        no column-level structure, so every stored pair (and the
+        diagonal) gets the full ``block_size`` — the safe superset the
+        ragged exchange planner pads up to when synapse tiles are not
+        available; tile occupancy
+        (:meth:`repro.snn.sparse.BlockSynapses.tile_occupancy`) refines
+        these widths down on the realized model.
+        """
+        return self.consumer_mask().astype(np.int64) * int(block_size)
+
     def transpose(self) -> "TrafficMatrix":
         return TrafficMatrix.from_coo(
             self.indices, self.rows(), self.data, self.n_devices

@@ -2,8 +2,11 @@
 
 Each op dispatches between the Pallas kernel (TPU target; validated on
 CPU via ``interpret=True``) and the pure-jnp oracle in
-:mod:`repro.kernels.ref`.  The model zoo calls these through
-``KernelPolicy`` so a single config flag flips an architecture between
+:mod:`repro.kernels.ref`.  The model zoo — and, since the ragged
+exchange landed, the distributed SNN engine's block-CSR accumulation
+(:func:`spike_currents_blocks` inside
+:meth:`repro.snn.distributed.DistributedSNN`) — calls these through
+``KernelPolicy`` so a single config flag flips a hot-spot between
 XLA-native ops (used by the dry-run, whose ``cost_analysis`` must see
 real HLO FLOPs) and the Pallas path (used by the kernel benchmarks and
 on real hardware).
@@ -123,7 +126,8 @@ def spike_currents_blocks(
     *,
     policy: KernelPolicy = KernelPolicy(),
 ) -> jax.Array:
-    """Block-CSR synaptic accumulation (the ``exchange='sparse'`` layout)."""
+    """Block-CSR synaptic accumulation (the ``exchange='sparse'`` /
+    ``'ragged'`` layout; the distributed engine's per-step hot-spot)."""
     if policy.use_pallas:
         return _spike_blocks(s_blocks, src_ids, blocks, interpret=policy.interpret)
     return _ref.spike_accum_blocks_ref(s_blocks, src_ids, blocks)

@@ -137,7 +137,10 @@ def spike_accum_blocks(
     *,
     interpret: bool = False,
 ) -> jax.Array:
-    """Block-CSR synaptic accumulation — the ``'sparse'`` engine's hot-spot.
+    """Block-CSR synaptic accumulation — the ``'sparse'``/``'ragged'``
+    engine's hot-spot, wired into ``DistributedSNN`` behind
+    ``KernelPolicy`` (``policy=KernelPolicy(use_pallas=True)`` flips the
+    engine's einsum to this kernel; interpret mode on CPU).
 
     Computes ``I = Σ_k s_blocks[src_ids[k]] @ blocks[k]`` for one device's
     stored incoming tiles (:meth:`repro.snn.sparse.BlockSynapses.padded`

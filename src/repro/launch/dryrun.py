@@ -68,7 +68,13 @@ def input_specs(cfg: ArchConfig, shape: ShapeSpec, pol) -> dict:
     tok_sh = pol.named("batch", None)
     if shape.kind == "decode":
         if cfg.modality == "audio":
-            return {"tokens": _sds((b, 1, cfg.n_codebooks), jnp.int32, tok_sh and pol.named("batch", None, None))}
+            return {
+                "tokens": _sds(
+                    (b, 1, cfg.n_codebooks),
+                    jnp.int32,
+                    tok_sh and pol.named("batch", None, None),
+                )
+            }
         return {"tokens": _sds((b, 1), jnp.int32, tok_sh)}
     if cfg.modality == "audio":
         sh = pol.named("batch", None, None)

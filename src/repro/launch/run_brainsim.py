@@ -30,7 +30,9 @@ def main():
     ap.add_argument("--neurons-per-pop", type=int, default=4)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument(
-        "--exchange", choices=["flat", "two_level", "sparse"], default="two_level"
+        "--exchange",
+        choices=["flat", "two_level", "sparse", "ragged"],
+        default="two_level",
     )
     ap.add_argument("--noise", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -77,6 +79,12 @@ def main():
         f"simulated {m} neurons × {args.steps} steps ({args.exchange} exchange): "
         f"{int(raster.sum())} spikes, mean rate {raster.mean():.4f}"
     )
+    if args.exchange in ("sparse", "ragged"):
+        vol = eng.exchange_stats()
+        print(
+            "slow-axis bytes/step: "
+            + "  ".join(f"{k}={v}" for k, v in sorted(vol.items()))
+        )
 
 
 if __name__ == "__main__":

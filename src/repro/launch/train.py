@@ -87,7 +87,8 @@ def main():
     losses = [h.loss for h in hist]
     print(
         f"steps {hist[0].step}..{hist[-1].step}: loss {losses[0]:.4f} → {losses[-1]:.4f}"
-        f"  (restarts={sum(h.restarted for h in hist)}, stragglers={sum(h.straggler for h in hist)})"
+        f"  (restarts={sum(h.restarted for h in hist)},"
+        f" stragglers={sum(h.straggler for h in hist)})"
     )
 
 

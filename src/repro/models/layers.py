@@ -558,8 +558,12 @@ def _rglru_gates(u: jax.Array, p: dict[str, jax.Array]):
     """Input gate i_t = σ(u·W_i); recurrence gate r_t = σ(u·W_r);
     a_t = exp(−c·softplus(Λ)·r_t);  b_t = √(1−a²)·i_t·u."""
     uf = u.astype(jnp.float32)
-    gate_i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", _bf(u), _bf(p["w_gate_i"])).astype(jnp.float32))
-    gate_r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", _bf(u), _bf(p["w_gate_r"])).astype(jnp.float32))
+    gate_i = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", _bf(u), _bf(p["w_gate_i"])).astype(jnp.float32)
+    )
+    gate_r = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", _bf(u), _bf(p["w_gate_r"])).astype(jnp.float32)
+    )
     log_a = -_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * gate_r
     a = jnp.exp(log_a)
     b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * gate_i * uf

@@ -168,13 +168,21 @@ def _mlp_defs(cfg: ArchConfig, r: int) -> dict[str, PDef]:
                 "router": PDef((r, d, e), (None, "fsdp", None)),
                 "w_in": PDef((r, e, d, f), (None, None, "fsdp", "tp")),
                 "w_gate": PDef((r, e, d, f), (None, None, "fsdp", "tp")),
-                "w_out": PDef((r, e, f, d), (None, None, "tp", "fsdp"), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+                "w_out": PDef(
+                    (r, e, f, d),
+                    (None, None, "tp", "fsdp"),
+                    scale=0.02 / math.sqrt(2 * cfg.n_layers),
+                ),
             }
         return {
             "router": PDef((r, d, e), (None, "fsdp", None)),
             "w_in": PDef((r, e, d, f), (None, "ep", "fsdp", None)),
             "w_gate": PDef((r, e, d, f), (None, "ep", "fsdp", None)),
-            "w_out": PDef((r, e, f, d), (None, "ep", None, "fsdp"), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+            "w_out": PDef(
+                (r, e, f, d),
+                (None, "ep", None, "fsdp"),
+                scale=0.02 / math.sqrt(2 * cfg.n_layers),
+            ),
         }
     return {
         "wi": PDef((r, d, f), (None, "fsdp", "tp")),
@@ -412,9 +420,18 @@ def init_cache(
                         jnp.float32,
                     ),
                     "conv": {
-                        "x": jnp.zeros((r, batch, cfg.conv_kernel - 1, cfg.d_inner), L.COMPUTE_DTYPE),
-                        "b": jnp.zeros((r, batch, cfg.conv_kernel - 1, cfg.ssm_groups * cfg.ssm_state), L.COMPUTE_DTYPE),
-                        "c": jnp.zeros((r, batch, cfg.conv_kernel - 1, cfg.ssm_groups * cfg.ssm_state), L.COMPUTE_DTYPE),
+                        "x": jnp.zeros(
+                            (r, batch, cfg.conv_kernel - 1, cfg.d_inner),
+                            L.COMPUTE_DTYPE,
+                        ),
+                        "b": jnp.zeros(
+                            (r, batch, cfg.conv_kernel - 1, cfg.ssm_groups * cfg.ssm_state),
+                            L.COMPUTE_DTYPE,
+                        ),
+                        "c": jnp.zeros(
+                            (r, batch, cfg.conv_kernel - 1, cfg.ssm_groups * cfg.ssm_state),
+                            L.COMPUTE_DTYPE,
+                        ),
                     },
                 }
             elif mixer == "rglru":

@@ -168,12 +168,19 @@ def _operands(op: Op) -> list[str]:
 
 
 def _attr(op: Op, key: str) -> str | None:
-    m = re.search(re.escape(key) + r"=(\{.*?\}|\[[^\]]*\](?:<=\[[\d,]+\])?(?:T\([\d,]+\))?|[\w\.\-\"]+)", op.rest)
+    m = re.search(
+        re.escape(key)
+        + r"=(\{.*?\}|\[[^\]]*\](?:<=\[[\d,]+\])?(?:T\([\d,]+\))?|[\w\.\-\"]+)",
+        op.rest,
+    )
     return m.group(1) if m else None
 
 
 def _replica_groups(op: Op, n_devices: int) -> list[list[int]] | None:
-    raw = re.search(r"replica_groups=(\{\{[\d,\{\}]*\}\}|\[[\d,]+\]<=\[[\d,]+\](?:T\(([\d,]+)\))?)", op.rest)
+    raw = re.search(
+        r"replica_groups=(\{\{[\d,\{\}]*\}\}|\[[\d,]+\]<=\[[\d,]+\](?:T\(([\d,]+)\))?)",
+        op.rest,
+    )
     if not raw:
         return None
     s = raw.group(1)
@@ -262,7 +269,7 @@ def _source_dtype_scale(op: Op, ops: list[Op], comps: dict[str, list[Op]]) -> fl
             d = by_name.get(name)
             if d is None:
                 continue
-            sub = Op(op.name, d.type_str, op.opcode, f"%{name})" + op.rest[op.rest.find(')') + 1 :])
+            sub = Op(op.name, d.type_str, op.opcode, f"%{name})" + op.rest[op.rest.find(")") + 1 :])
             b = _shape_bytes(d.type_str)
             total_b += b
             scaled += b * _source_dtype_scale(sub, ops, comps)

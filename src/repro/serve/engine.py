@@ -206,7 +206,12 @@ def _tile_cache(cache, b: int):
 def _splice_cache(batched, single, slot: int):
     """Write a batch-1 cache into slot ``slot`` of a batched cache."""
     def splice(bc, sc_):
-        if bc.ndim >= 2 and sc_.ndim == bc.ndim and sc_.shape[1] == 1 and bc.shape[0] == sc_.shape[0]:
+        if (
+            bc.ndim >= 2
+            and sc_.ndim == bc.ndim
+            and sc_.shape[1] == 1
+            and bc.shape[0] == sc_.shape[0]
+        ):
             if bc.shape[1] == 1:
                 return sc_
             return jax.lax.dynamic_update_slice(

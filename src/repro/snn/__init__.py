@@ -17,6 +17,12 @@ from repro.snn.engine import (
     expand_synapses_sparse,
 )
 from repro.snn.sparse import BlockSynapses, exchange_schedule, exchange_volume
+from repro.snn.ragged import (
+    RaggedPlan,
+    RaggedRound,
+    bridge_inner_from_table,
+    build_ragged_plan,
+)
 from repro.snn.distributed import (
     DistributedSNN,
     group_mesh_permutation,
@@ -39,6 +45,10 @@ __all__ = [
     "BlockSynapses",
     "exchange_schedule",
     "exchange_volume",
+    "RaggedPlan",
+    "RaggedRound",
+    "bridge_inner_from_table",
+    "build_ragged_plan",
     "DistributedSNN",
     "group_mesh_permutation",
     "partition_permutation",

@@ -15,18 +15,28 @@ per device, and the per-step spike exchange follows either
   :func:`repro.core.routing.needed_sources` from an Algorithm-2 table)
   schedules masked ``ppermute`` rounds over the slow axis so only the
   blocks somebody actually consumes ever move
-  (:mod:`repro.snn.sparse`).
+  (:mod:`repro.snn.sparse`), or
+* ``exchange='ragged'``    — the **bridge-compacted, column-pruned**
+  exchange (:mod:`repro.snn.ragged`): each scheduled cross-group pair
+  moves one packed ``f32[K_r]`` payload (only the consumed source
+  columns, padded to the per-round max) from the sending group's bridge
+  device straight to the receiving group's bridge, which re-broadcasts
+  it over the fast axis — eliminating the ``R×`` inner-position
+  redundancy ``'sparse'`` still carries, exactly the paper's
+  Algorithm-2 bridge.
 
-All three deliver the same effective global spike vector; what changes
+All four deliver the same effective global spike vector; what changes
 is the collective schedule — message counts, bytes, and which links
 carry them — exactly the paper's claim.  ``'flat'`` is kept as the dense
-oracle the sparse path is pinned against.
+oracle the sparse/ragged paths are pinned against.
 
 Synaptic accumulation per device: dense ``I_loc = s_global @ W[:, local]``
 (each device holds the incoming-weight column block of the permuted
 synapse matrix) for ``'flat'``/``'two_level'``; block-CSR
-``I_loc = Σ_k s_blk[src_ids[k]] @ blocks[k]`` for ``'sparse'`` (the
-Pallas counterpart is ``repro.kernels.spike_accum_blocks``) — the
+``I_loc = Σ_k s_blk[src_ids[k]] @ blocks[k]`` for ``'sparse'``/``'ragged'``
+via :func:`repro.kernels.spike_currents_blocks`, so ``policy``
+(:class:`repro.kernels.KernelPolicy`) flips the hot-spot between the
+jnp einsum oracle and the Pallas ``spike_accum_blocks`` kernel — the
 ``[M, M]`` matrix is never materialized on that path.
 """
 from __future__ import annotations
@@ -42,6 +52,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core.routing import pool_block_mask
+from repro.kernels.ops import KernelPolicy, spike_currents_blocks
+from repro.snn.ragged import RaggedPlan, build_ragged_plan
 from repro.snn.sparse import BlockSynapses, exchange_schedule, exchange_volume
 from repro.snn.neuron import (
     IzhikevichParams,
@@ -101,14 +113,23 @@ class DistributedSNN:
     Attributes:
       mesh: device mesh; axis names e.g. ``("data",)`` or ``("pod", "data")``.
       w_syn: ``f32[M, M]`` *permuted* synapse matrix (Alg. 1 order).
-        Optional when ``syn`` is given and ``exchange='sparse'``.
+        Optional when ``syn`` is given and ``exchange`` is
+        ``'sparse'``/``'ragged'``.
       params: neuron model constants.
-      exchange: 'flat' | 'two_level' | 'sparse' (two_level requires a 2-D
-        mesh; sparse runs on 1-D and 2-D).
+      exchange: 'flat' | 'two_level' | 'sparse' | 'ragged' (two_level
+        requires a 2-D mesh; sparse and ragged run on 1-D and 2-D).
       i_ext: external drive.
-      syn: block-CSR synapse tiles (``exchange='sparse'``); derived from
-        ``w_syn`` when omitted.  ``syn.n_blocks`` must equal the device
-        count.
+      syn: block-CSR synapse tiles (``exchange='sparse'``/``'ragged'``);
+        derived from ``w_syn`` when omitted.  ``syn.n_blocks`` must equal
+        the device count.
+      policy: how the block-CSR accumulation hot-spot executes — the jnp
+        einsum oracle (default) or the Pallas ``spike_accum_blocks``
+        kernel (``KernelPolicy(use_pallas=True)``; keep
+        ``interpret=True`` on CPU).
+      bridge_inner: ``int[G, G]`` inner mesh index of each group's bridge
+        device per destination group (``exchange='ragged'``); ``None``
+        spreads bridge duty round-robin.  Derive from an Algorithm-2
+        table with :func:`repro.snn.ragged.bridge_inner_from_table`.
     """
 
     mesh: Mesh
@@ -117,17 +138,19 @@ class DistributedSNN:
     exchange: str = "flat"
     i_ext: float = 0.0
     syn: BlockSynapses | None = None
+    policy: KernelPolicy = KernelPolicy()
+    bridge_inner: np.ndarray | None = None
 
     def __post_init__(self):
         if self.params is None:
             raise ValueError("params is required")
-        if self.exchange not in ("flat", "two_level", "sparse"):
+        if self.exchange not in ("flat", "two_level", "sparse", "ragged"):
             raise ValueError(self.exchange)
         if self.exchange == "two_level" and len(self.mesh.axis_names) < 2:
             raise ValueError("two_level exchange needs a 2-D mesh")
         if self.w_syn is None and self.syn is None:
             raise ValueError("need w_syn or syn")
-        if self.w_syn is None and self.exchange != "sparse":
+        if self.w_syn is None and self.exchange not in ("sparse", "ragged"):
             raise ValueError(f"exchange={self.exchange!r} needs dense w_syn")
         if self.syn is not None and self.syn.n_blocks != self.n_devices:
             raise ValueError(
@@ -156,22 +179,31 @@ class DistributedSNN:
             return self.syn
         return BlockSynapses.from_dense(np.asarray(self.w_syn), self.n_devices)
 
+    def _ragged_plan(self) -> RaggedPlan:
+        """The static ragged level-2 schedule this engine executes (or
+        would execute) with ``exchange='ragged'``."""
+        g, r = self._mesh_groups()
+        return build_ragged_plan(
+            self._block_synapses(), (g, r), bridge_inner=self.bridge_inner
+        )
+
     def exchange_stats(self) -> dict[str, int]:
         """Per-step slow-axis receive volume (bytes): the dense schedule
-        vs the block-mask-driven one this engine would run with
-        ``exchange='sparse'``."""
+        vs the block-mask-driven one (``exchange='sparse'``) vs the
+        bridge-compacted column-pruned one (``exchange='ragged'``)."""
         syn = self._block_synapses()
         g, r = self._mesh_groups()
         return exchange_volume(
             syn.mask(),
             mesh_shape=(g, r) if len(self.axis_names) > 1 else (g,),
             block_bytes=syn.block_size * 4,
+            plan=self._ragged_plan(),
         )
 
     def run(self, n_steps: int, *, key: jax.Array | None = None) -> jax.Array:
         """Simulate; returns the global spike raster ``[T, M]``."""
         key = jax.random.PRNGKey(0) if key is None else key
-        if self.exchange == "sparse":
+        if self.exchange in ("sparse", "ragged"):
             return self._run_sparse(n_steps, key=key)
         m = self.w_syn.shape[0]
         n_dev = self.n_devices
@@ -232,16 +264,28 @@ class DistributedSNN:
         return jax.jit(_run)(v0, u0, keys, w)
 
     def _run_sparse(self, n_steps: int, *, key: jax.Array) -> jax.Array:
-        """Masked block exchange + block-CSR accumulation.
+        """Masked/ragged block exchange + block-CSR accumulation.
 
         Level-1 (fast axes) gathers the group spike block as in
-        ``'two_level'``; level-2 runs only the ``ppermute`` rounds the
-        group-pooled block mask schedules — unneeded group blocks never
-        cross the slow axis (their receive slots stay zero, and the
-        block-CSR storage holds no tile for them, so the raster is
-        identical to the dense oracle).  All shapes and the schedule are
-        static; the mask is data-independent (derived from the synapse
-        tiles / routing table at trace time).
+        ``'two_level'``.  Level-2 depends on ``exchange``:
+
+        * ``'sparse'`` — only the ``ppermute`` rounds the group-pooled
+          block mask schedules run, every inner position shipping the
+          full ``R·B`` group block;
+        * ``'ragged'`` — each scheduled pair moves one packed
+          ``f32[K_r]`` payload (consumed columns only, padded to the
+          per-round max) bridge-to-bridge via a joint-axis ``ppermute``,
+          then a fast-axis ``psum`` re-broadcasts it inside the receiving
+          group and the payload is scattered back into its block slots
+          (pad lanes land in a trash slot).
+
+        Unneeded group blocks/columns never cross the slow axis — their
+        receive slots stay zero, and the block-CSR storage holds no
+        weight for them, so the raster is identical to the dense oracle.
+        All shapes and both schedules are static (derived from the
+        synapse tiles / routing table at trace time); the accumulation
+        runs through :func:`repro.kernels.spike_currents_blocks` so
+        ``policy`` flips einsum ↔ Pallas without touching the exchange.
         """
         syn = self._block_synapses()
         n_dev = self.n_devices
@@ -250,25 +294,43 @@ class DistributedSNN:
         axes = self.axis_names
         g, r = self._mesh_groups()
         slow, inner = axes[0], axes[1:]
-        gmask = pool_block_mask(syn.mask(), np.arange(n_dev) // r, g)
-        rounds = exchange_schedule(gmask)
+        ragged = self.exchange == "ragged"
+        rb = r * b
         src_pad, blk_pad = syn.padded()  # [n_dev, K], [n_dev, K, B, B]
+
+        if ragged:
+            plan = self._ragged_plan()
+            live = [rnd for rnd in plan.rounds if rnd.pairs]
+            # per-device (send, recv) index rows, one [n_dev, 2, K_r]
+            # array per live round (round widths differ — static shapes
+            # per ppermute, not across them)
+            idx_arrays = tuple(
+                jnp.asarray(np.stack([rnd.send_idx, rnd.recv_idx], axis=1))
+                for rnd in live
+            )
+        else:
+            gmask = pool_block_mask(syn.mask(), np.arange(n_dev) // r, g)
+            rounds = exchange_schedule(gmask)
+            idx_arrays = ()
 
         step = lif_step if isinstance(self.params, LIFParams) else izhikevich_step
         params = self.params
+        policy = self.policy
         i_ext = jnp.float32(self.i_ext)
         vec_spec = P(axes)
         blk_spec = P(axes)  # tile arrays sharded over their leading dim
 
+        def gather_group(spikes_loc):
+            if r > 1:
+                return jax.lax.all_gather(spikes_loc, inner, axis=0, tiled=True)
+            return spikes_loc  # [R·B] group spike block
+
         def gather_blocks(spikes_loc):
             """[B] local spikes → [n_dev, B] global blocks (zeros where
             the schedule skipped the transfer)."""
-            if r > 1:
-                s_grp = jax.lax.all_gather(spikes_loc, inner, axis=0, tiled=True)
-            else:
-                s_grp = spikes_loc  # [R·B] group spike block
+            s_grp = gather_group(spikes_loc)
             gid = jax.lax.axis_index(slow)
-            buf = jnp.zeros((g, r * b), jnp.float32)
+            buf = jnp.zeros((g, rb), jnp.float32)
             buf = buf.at[gid].set(s_grp)
             for shift, pairs in enumerate(rounds, start=1):
                 if not pairs:
@@ -280,14 +342,33 @@ class DistributedSNN:
                 buf = buf.at[(gid - shift) % g].set(recv)
             return buf.reshape(n_dev, b)
 
+        def gather_blocks_ragged(spikes_loc, idx_loc):
+            """Ragged level-2: bridge-only packed ppermute + fast-axis
+            broadcast + scatter into block slots (trash slot ``rb``)."""
+            s_grp = gather_group(spikes_loc)
+            gid = jax.lax.axis_index(slow)
+            buf = jnp.zeros((g, rb + 1), jnp.float32)
+            buf = buf.at[gid, :rb].set(s_grp)
+            for rnd, idx in zip(live, idx_loc):
+                send_idx = idx[0, 0]  # [K_r] columns of s_grp to pack
+                recv_idx = idx[0, 1]  # [K_r] slots (rb = trash)
+                payload = s_grp[send_idx]
+                recv = jax.lax.ppermute(payload, axes, perm=rnd.perm)
+                if r > 1:
+                    # only the receiving bridge got data; everyone else
+                    # holds zeros, so a psum is the intra-group broadcast
+                    recv = jax.lax.psum(recv, inner)
+                buf = buf.at[(gid - rnd.shift) % g, recv_idx].add(recv)
+            return buf[:, :rb].reshape(n_dev, b)
+
         @functools.partial(
             shard_map,
             mesh=self.mesh,
-            in_specs=(vec_spec, vec_spec, P(axes), blk_spec, blk_spec),
+            in_specs=(vec_spec, vec_spec, P(axes), blk_spec, blk_spec, P(axes)),
             out_specs=P(None, axes),
             check_vma=False,
         )
-        def _run(v0, u0, keys, src_ids, blocks):
+        def _run(v0, u0, keys, src_ids, blocks, idx_loc):
             state = NeuronState(v=v0, u=u0, key=keys[0])
             src_ids_loc = src_ids[0]  # [K]
             blocks_loc = blocks[0]  # [K, B, B]
@@ -295,14 +376,13 @@ class DistributedSNN:
 
             def body(carry, _):
                 state, prev_loc = carry
-                s_blocks = gather_blocks(prev_loc)
-                sel = s_blocks[src_ids_loc]  # [K, B]
+                if ragged:
+                    s_blocks = gather_blocks_ragged(prev_loc, idx_loc)
+                else:
+                    s_blocks = gather_blocks(prev_loc)
                 i_syn = (
-                    jnp.einsum(
-                        "kb,kbj->j",
-                        sel,
-                        blocks_loc,
-                        preferred_element_type=jnp.float32,
+                    spike_currents_blocks(
+                        s_blocks, src_ids_loc, blocks_loc, policy=policy
                     )
                     + i_ext
                 )
@@ -327,4 +407,5 @@ class DistributedSNN:
         blk_sharding = NamedSharding(self.mesh, blk_spec)
         src_arr = jax.device_put(jnp.asarray(src_pad), blk_sharding)
         blk_arr = jax.device_put(jnp.asarray(blk_pad), blk_sharding)
-        return jax.jit(_run)(v0, u0, keys, src_arr, blk_arr)
+        idx_put = tuple(jax.device_put(a, blk_sharding) for a in idx_arrays)
+        return jax.jit(_run)(v0, u0, keys, src_arr, blk_arr, idx_put)

@@ -14,7 +14,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["LIFParams", "IzhikevichParams", "NeuronState", "lif_step", "izhikevich_step", "init_state"]
+__all__ = [
+    "LIFParams",
+    "IzhikevichParams",
+    "NeuronState",
+    "lif_step",
+    "izhikevich_step",
+    "init_state",
+]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -87,6 +87,16 @@ class BlockSynapses:
         np.fill_diagonal(out, True)
         return out
 
+    def tile_occupancy(self) -> np.ndarray:
+        """``bool[nnzb, B]`` — ``occ[k, i]`` is True when row ``i`` of tile
+        ``k`` holds any nonzero weight, i.e. the destination block consumes
+        source neuron ``i`` of block ``src_ids[k]``.  This is the per-tile
+        consumed-column set the ragged exchange planner prunes payloads
+        with (:mod:`repro.snn.ragged`): a source spike whose row is empty
+        in every tile of a group pair never needs to cross the slow axis.
+        """
+        return np.abs(self.blocks).sum(axis=2) > 0
+
     def to_dense(self) -> np.ndarray:
         """Materialize ``f32[M, M]`` (small models / parity tests only)."""
         b = self.block_size
@@ -202,25 +212,40 @@ def exchange_volume(
     *,
     mesh_shape: tuple[int, ...] | None = None,
     block_bytes: int,
+    plan=None,
 ) -> dict[str, int]:
-    """Slow-axis bytes received per simulation step: flat vs masked.
+    """Slow-axis bytes received per simulation step: flat vs masked vs ragged.
 
     ``mask`` is the device-level block mask (``bool[n_dev, n_dev]``,
     diagonal ignored).  On a 1-D mesh (``mesh_shape=None`` or ``(n,)``)
     every off-diagonal pair is a slow-axis transfer; on a 2-D ``(G, R)``
     mesh only the level-2 (cross-group) stage counts — level-1 gathers are
-    identical for both schedules.  Each scheduled cross-group pair moves
+    identical for all schedules.  Each scheduled cross-group pair moves
     the group-aggregated block (``R · block_bytes``) once per inner
     position (``ppermute`` over the slow axis runs per inner index),
     mirroring what :func:`exchange_schedule` actually executes.
+
+    When ``plan`` (a :class:`repro.snn.ragged.RaggedPlan` for the same
+    mask and mesh) is given, the result gains a ``'ragged'`` entry:
+    the bridge-compacted, column-pruned payload bytes the ragged executor
+    moves — per round, ``|pairs_r| · K_r · 4`` with ``K_r`` the padded
+    payload width, so the accounting matches the executed ``ppermute``
+    schedule exactly (padding included).
     """
     n = int(mask.shape[0])
     if mesh_shape is None or len(mesh_shape) == 1:
         off = ~np.eye(n, dtype=bool)
-        return {
+        out = {
             "flat": n * (n - 1) * block_bytes,
             "sparse": int(np.count_nonzero(mask & off)) * block_bytes,
         }
+        if plan is not None:
+            if plan.mesh_shape != (n, 1):
+                raise ValueError(
+                    f"plan mesh {plan.mesh_shape} incompatible with 1-D mask [{n}]"
+                )
+            out["ragged"] = plan.bytes_per_step
+        return out
     from repro.core.routing import pool_block_mask
 
     g, r = int(mesh_shape[0]), int(np.prod(mesh_shape[1:]))
@@ -231,7 +256,14 @@ def exchange_volume(
     gm = pool_block_mask(mask, np.arange(n) // r, g)
     np.fill_diagonal(gm, False)
     pair_bytes = r * (r * block_bytes)  # R inner copies of the R·B block
-    return {
+    out = {
         "flat": g * (g - 1) * pair_bytes,
         "sparse": int(np.count_nonzero(gm)) * pair_bytes,
     }
+    if plan is not None:
+        if plan.mesh_shape != (g, r):
+            raise ValueError(
+                f"plan mesh {plan.mesh_shape} incompatible with mesh {mesh_shape}"
+            )
+        out["ragged"] = plan.bytes_per_step
+    return out

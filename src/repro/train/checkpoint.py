@@ -39,7 +39,14 @@ def _flatten(params: Any) -> dict[str, np.ndarray]:
     return out
 
 
-def save(ckpt_dir: str, step: int, params: Any, opt_state: Any | None = None, *, meta: dict | None = None) -> str:
+def save(
+    ckpt_dir: str,
+    step: int,
+    params: Any,
+    opt_state: Any | None = None,
+    *,
+    meta: dict | None = None,
+) -> str:
     """Blocking atomic save.  Returns the final directory."""
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -131,7 +138,14 @@ class Checkpointer:
             self._thread.join()
             self._thread = None
 
-    def save_async(self, step: int, params: Any, opt_state: Any | None = None, *, meta: dict | None = None):
+    def save_async(
+        self,
+        step: int,
+        params: Any,
+        opt_state: Any | None = None,
+        *,
+        meta: dict | None = None,
+    ):
         self.wait()
         host_p = jax.tree.map(np.asarray, params)  # blocks on D2H only
         host_o = jax.tree.map(np.asarray, opt_state) if opt_state is not None else None

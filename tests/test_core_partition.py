@@ -130,3 +130,86 @@ class TestAlgorithm1:
         res = simulated_annealing_partition(g, 4, steps=1500)
         start = random_partition(g, 4, balanced=True).cut
         assert res.cut <= start * 1.1
+
+
+class TestSwapMoves:
+    """Balanced pair-swap refinement (swap_sweep_csr_seq)."""
+
+    def _planted_pairs(self):
+        """16 vertices in 8 planted size-2 communities (strong pair edge,
+        weak ring between communities) — single moves cannot repair a
+        transposed pair without breaking balance."""
+        src, dst, probs = [], [], []
+        for i in range(8):
+            src += [2 * i]
+            dst += [2 * i + 1]
+            probs += [1.0]
+            src += [2 * i]
+            dst += [(2 * i + 2) % 16]
+            probs += [0.02]
+        return build_graph(src, dst, probs, np.ones(16))
+
+    def test_swap_fixes_transposed_pair(self):
+        from repro.core.partition import cut_traffic, swap_sweep_csr_seq
+
+        g = self._planted_pairs()
+        ideal = np.arange(16) // 2
+        # transpose one vertex between two full parts: a fixed point of
+        # the single-move sweeps (any move overloads a part)
+        assign = ideal.copy()
+        assign[1], assign[3] = assign[3], assign[1]
+        cut0 = cut_traffic(g, assign)
+        et = g.edge_traffic()
+        moved = swap_sweep_csr_seq(
+            g.indptr, g.indices, et, g.weights, assign, 8, cap=2.0
+        )
+        assert moved >= 1
+        assert cut_traffic(g, assign) < cut0
+        np.testing.assert_array_equal(assign[::2], assign[1::2])
+
+    def test_greedy_recovers_size2_communities(self):
+        """The ROADMAP failure case: planted size-2 communities on 8
+        devices are now recoverable (pair-swap escape); without
+        swap_moves the refinement stays stuck for these seeds."""
+        g = self._planted_pairs()
+        for seed in range(5):
+            res = greedy_partition(g, 8, seed=seed)
+            np.testing.assert_array_equal(res.assign[::2], res.assign[1::2])
+
+
+class TestGeneticRepair:
+    def test_no_empty_groups(self):
+        """Regression: GA chromosomes with empty parts must be repaired.
+        With seed 0 below, genetic_partition used to return assignments
+        leaving parts empty (e.g. gseed 1 → part 2 empty on 12 vertices /
+        6 parts), which later broke RoutingTable.validate()."""
+        rng = np.random.default_rng(0)
+        n = 12
+        src, dst = np.nonzero(np.triu(rng.random((n, n)) < 0.3, 1))
+        g = build_graph(
+            src, dst, rng.random(src.size), rng.gamma(2.0, 1.0, n) + 0.1
+        )
+        for n_parts in (6, 8):
+            for gseed in range(8):
+                res = genetic_partition(g, n_parts, seed=gseed)
+                counts = np.bincount(res.assign, minlength=n_parts)
+                assert (counts > 0).all(), (n_parts, gseed, counts)
+
+    def test_two_level_routing_validates_with_genetic(self):
+        """two_level_routing(grouping='genetic') must never fail
+        RoutingTable.validate() with 'bridge … is not a member' (the
+        empty-group symptom; gseeds 2 and 4 used to fail here)."""
+        from repro.core import TrafficMatrix, two_level_routing
+
+        rng = np.random.default_rng(0)
+        n = 12
+        t = rng.random((n, n)) * (rng.random((n, n)) < 0.3)
+        t = t + t.T
+        np.fill_diagonal(t, 0.0)
+        wg = np.ones(n)
+        for gseed in range(6):
+            tb = two_level_routing(
+                TrafficMatrix.from_dense(t), wg, 6, grouping="genetic", seed=gseed
+            )
+            counts = np.bincount(tb.group_of, minlength=6)
+            assert (counts > 0).all()

@@ -41,13 +41,16 @@ from repro.compat import make_mesh, shard_map
 from repro.core.hierarchical import hierarchical_psum, flat_psum, two_level_all_gather
 mesh = make_mesh((2, 4), ("pod", "data"))
 g = jnp.arange(16*4, dtype=jnp.float32).reshape(16, 4)
-wrap = lambda f: jax.jit(functools.partial(shard_map, mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False)(f))
+wrap = lambda f: jax.jit(functools.partial(
+    shard_map, mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False)(f))
 hp = wrap(lambda v: hierarchical_psum(v))
 fp = wrap(lambda v: flat_psum(v, ("pod", "data")))
 np.testing.assert_allclose(np.asarray(hp(g)), np.asarray(fp(g)))
 # two-level all-gather == identity on replicated inputs gathered over shards
 xs = jnp.arange(8*3, dtype=jnp.float32).reshape(8, 3)
-ag = jax.jit(functools.partial(shard_map, mesh=mesh, in_specs=(P(("pod","data")),), out_specs=P(), check_vma=False)(lambda v: two_level_all_gather(v)))
+ag = jax.jit(functools.partial(
+    shard_map, mesh=mesh, in_specs=(P(("pod","data")),), out_specs=P(),
+    check_vma=False)(lambda v: two_level_all_gather(v)))
 np.testing.assert_allclose(np.asarray(ag(xs)), np.asarray(xs))
 print("OK")
 """

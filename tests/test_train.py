@@ -199,8 +199,14 @@ class TestData:
 
     def test_host_sharding_partitions(self):
         full = SyntheticLM(CFG, DataConfig(seq_len=32, global_batch=8, seed=1))
-        h0 = SyntheticLM(CFG, DataConfig(seq_len=32, global_batch=8, seed=1, host_index=0, host_count=2))
-        h1 = SyntheticLM(CFG, DataConfig(seq_len=32, global_batch=8, seed=1, host_index=1, host_count=2))
+        h0 = SyntheticLM(
+            CFG,
+            DataConfig(seq_len=32, global_batch=8, seed=1, host_index=0, host_count=2),
+        )
+        h1 = SyntheticLM(
+            CFG,
+            DataConfig(seq_len=32, global_batch=8, seed=1, host_index=1, host_count=2),
+        )
         assert h0(0)["tokens"].shape[0] == 4
         assert not np.array_equal(h0(0)["tokens"], h1(0)["tokens"])
 
