@@ -26,6 +26,7 @@ __all__ = [
     "PaperScale",
     "build_setup",
     "build_device_traffic",
+    "paper_fabric",
     "emit",
     "timed",
     "start_capture",
@@ -82,6 +83,23 @@ def build_device_traffic(bm, assign: np.ndarray, n_devices: int):
     stored), so the symmetry auto-detection pass is skipped.
     """
     return device_traffic_csr(bm.graph, assign, n_devices, sym_mode="both")
+
+
+def paper_fabric(n_devices: int):
+    """Two-tier pod/DCN fabric approximating the paper's machine shape
+    for netsim latency replays: ~1% of the devices per pod (20 pods of
+    ~100 at the 2,000-GPU scale), oversubscribed spine, pod size
+    snapped down so it divides ``n_devices``.  Falls back to a single
+    switch when no pod split is possible.
+    """
+    from repro import netsim
+
+    pod = max(n_devices // 100, 2)
+    while pod > 1 and n_devices % pod:
+        pod -= 1
+    if pod < 2:
+        return netsim.single_switch(n_devices)
+    return netsim.two_tier(n_devices, pod)
 
 
 # When non-None, every emit() is also appended here — the machine-readable

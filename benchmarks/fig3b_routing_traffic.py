@@ -2,13 +2,25 @@
 
 Paper claims: proposed-grouping peak is 51.1% below P2P; the GA
 grouping's peak is 39.2% above the proposed one.
+
+``--latency-model {closed_form,netsim}`` additionally converts each
+scheme's routing table into a step-latency estimate through the shared
+``repro.core.estimate()`` API — ``netsim`` replays the table's
+forwarding schedule on a simulated two-tier pod/DCN fabric.
 """
 from __future__ import annotations
 
 import argparse
 
-from repro.core import level2_egress, p2p_routing, two_level_routing
-from benchmarks.common import PaperScale, build_device_traffic, build_setup, emit, timed
+from repro.core import ClusterModel, estimate, level2_egress, p2p_routing, two_level_routing
+from benchmarks.common import (
+    PaperScale,
+    build_device_traffic,
+    build_setup,
+    emit,
+    paper_fabric,
+    timed,
+)
 
 
 def run(scale: PaperScale, *, method: str = "greedy"):
@@ -36,12 +48,17 @@ def main(argv=None):
         "--method", choices=["greedy", "multilevel"], default="greedy",
         help="partitioner feeding the device graph",
     )
+    ap.add_argument(
+        "--latency-model", choices=["none", "closed_form", "netsim"],
+        default="none",
+        help="also emit per-scheme step latency via repro.core.estimate()",
+    )
     args = ap.parse_args(argv)
     scale = PaperScale(
         n_devices=args.devices, n_populations=args.populations,
         n_groups=args.groups or None
     )
-    egress, _, wall = run(scale, method=args.method)
+    egress, routing, wall = run(scale, method=args.method)
     # peaks over devices that actually carry level-2 traffic
     peaks = {k: float(v.max()) for k, v in egress.items()}
     vs_p2p = 100.0 * (1 - peaks["greedy"] / peaks["p2p"])
@@ -52,6 +69,22 @@ def main(argv=None):
     emit("fig3b/greedy_vs_p2p_pct", round(vs_p2p, 1), "paper: 51.1")
     emit("fig3b/ga_above_greedy_pct", round(ga_vs_greedy, 1), "paper: 39.2")
     emit("fig3b/two_level_routing_wall_s", round(wall, 2), "sparse Alg. 2 wall-clock")
+    if args.latency_model != "none":
+        # same calibration as table2_latency; the netsim replay runs on
+        # the paper's pod/DCN fabric (see the module docstring)
+        cluster = ClusterModel(bytes_per_traffic_unit=2.0e5)
+        topology = (
+            paper_fabric(scale.n_devices)
+            if args.latency_model == "netsim"
+            else None
+        )
+        for k, tb in routing.items():
+            lb = estimate(tb, cluster, model=args.latency_model, topology=topology)
+            emit(
+                f"fig3b/step_latency_{k}_s",
+                round(lb.t_total, 4),
+                f"estimate(model={args.latency_model!r})",
+            )
     return {"peaks": peaks, "vs_p2p": vs_p2p, "ga_vs_greedy": ga_vs_greedy, "wall": wall}
 
 

@@ -47,6 +47,7 @@ def main(argv=None):
         table2_latency,
         hierarchical_a2a,
         kernel_bench,
+        netsim_latency,
         roofline_report,
         snn_throughput,
     )
@@ -64,6 +65,9 @@ def main(argv=None):
         ("a2a", hierarchical_a2a.main, exec_flag),
         ("kernels", kernel_bench.main, [] if args.full else ["--small"]),
         ("snn", snn_throughput.main, exec_flag),
+        # CI runs the reduced scope (32-device scenarios); --full adds
+        # the Algorithm-2 forwarding replay at device scale
+        ("netsim", netsim_latency.main, [] if args.full else ["--reduced"]),
         ("roofline", roofline_report.main, []),
     ]
 

@@ -17,27 +17,52 @@ from repro.core import (
     table2_row,
     two_level_routing,
 )
-from benchmarks.common import PaperScale, build_device_traffic, build_setup, emit
+from benchmarks.common import (
+    PaperScale,
+    build_device_traffic,
+    build_setup,
+    emit,
+    paper_fabric,
+)
 
 NOISES = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6)
 
 
-def _row(bm, part, scale: PaperScale, routing: str, cluster: ClusterModel):
+def _row(
+    bm,
+    part,
+    scale: PaperScale,
+    routing: str,
+    cluster: ClusterModel,
+    *,
+    model: str = "closed_form",
+    topology=None,
+):
     # sparse CSR device traffic — no [N, N] intermediate at paper scale
     t, wg = build_device_traffic(bm, part.assign, scale.n_devices)
     if routing == "p2p":
         tb = p2p_routing(t, wg)
     else:
         tb = two_level_routing(t, wg, scale.n_groups, grouping=routing)
-    return table2_row(tb, cluster, NOISES)
+    return table2_row(tb, cluster, NOISES, model=model, topology=topology)
 
 
-def run(scale: PaperScale, cluster: ClusterModel, *, method: str = "greedy"):
+def run(
+    scale: PaperScale,
+    cluster: ClusterModel,
+    *,
+    method: str = "greedy",
+    model: str = "closed_form",
+):
     bm, parts = build_setup(scale, method=method)
+    # netsim replays run on the pod/DCN machine shape (oversubscribed
+    # spine) — the congestion surface the closed-form γ term only fits
+    topology = paper_fabric(scale.n_devices) if model == "netsim" else None
+    kw = {"model": model, "topology": topology}
     return {
-        "random+p2p": _row(bm, parts["random"], scale, "p2p", cluster),
-        "ga+ga": _row(bm, parts["ga"], scale, "genetic", cluster),
-        "proposed": _row(bm, parts["proposed"], scale, "greedy", cluster),
+        "random+p2p": _row(bm, parts["random"], scale, "p2p", cluster, **kw),
+        "ga+ga": _row(bm, parts["ga"], scale, "genetic", cluster, **kw),
+        "proposed": _row(bm, parts["proposed"], scale, "greedy", cluster, **kw),
     }
 
 
@@ -52,14 +77,22 @@ def main(argv=None):
         default="greedy",
         help="proposed-row partitioner (Algorithm 1 or the multilevel scheme)",
     )
+    ap.add_argument(
+        "--latency-model",
+        choices=["closed_form", "netsim"],
+        default="closed_form",
+        help="latency backend: the α-β-congestion formulas or the "
+        "discrete-event interconnect simulator (repro.netsim)",
+    )
     args = ap.parse_args(argv)
     # bytes_per_traffic_unit calibrated so the proposed row lands in the
     # paper's sub-second regime at 2000 devices (same constant for all
     # rows — only the *structure* differs between schemes)
     cluster = ClusterModel(bytes_per_traffic_unit=2.0e5)
     scale = PaperScale(n_devices=args.devices, n_populations=args.populations)
-    rows = run(scale, cluster, method=args.method)
+    rows = run(scale, cluster, method=args.method, model=args.latency_model)
     emit("table2/method", args.method, "proposed-row partitioner")
+    emit("table2/latency_model", args.latency_model, "estimate() backend")
     for name, row in rows.items():
         emit(
             f"table2/{name}_s",
@@ -77,7 +110,7 @@ def main(argv=None):
             total_neurons=20_000_000_000,
             seed=1,
         )
-        rows2 = run(scale2, cluster, method=args.method)
+        rows2 = run(scale2, cluster, method=args.method, model=args.latency_model)
         emit(
             "table2/proposed_4000gpu_s",
             " ".join(f"{x:.3f}" for x in rows2["proposed"]),

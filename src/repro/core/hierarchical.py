@@ -45,6 +45,7 @@ __all__ = [
     "dispatch_bytes",
     "dispatch_messages",
     "dispatch_messages_from_table",
+    "dispatch_rounds",
 ]
 
 
@@ -163,6 +164,49 @@ def dispatch_messages(
         "cross_pod": cross,
         "intra_pod": n_pods * n_inner * (n_inner - 1),
     }
+
+
+def dispatch_rounds(
+    n_pods: int, n_inner: int, chunk_bytes: int, *, two_level: bool
+) -> list[list[tuple[int, int, int]]]:
+    """Wire-level ``(src, dst, nbytes)`` triples per phase of the
+    all-to-all — the replay input for :mod:`repro.netsim`.
+
+    Devices are row-major over ``(pod, inner)``.  ``two_level=False``
+    is one phase of direct P2P chunks (``n·(n-1)`` messages of
+    ``chunk_bytes``).  ``two_level=True`` mirrors
+    :func:`two_level_all_to_all`: phase 1 exchanges pod-aggregated
+    slabs of ``n_pods · chunk_bytes`` between same-pod peers, phase 2
+    moves one ``n_inner · chunk_bytes`` slab per (device, remote-pod
+    counterpart) across the pod boundary.  Message counts match
+    :func:`dispatch_messages` and cross-pod bytes match
+    :func:`dispatch_bytes` by construction.
+    """
+    n_dev = n_pods * n_inner
+    if not two_level:
+        return [
+            [
+                (s, d, chunk_bytes)
+                for s in range(n_dev)
+                for d in range(n_dev)
+                if s != d
+            ]
+        ]
+    phase1 = [
+        (p * n_inner + i, p * n_inner + j, n_pods * chunk_bytes)
+        for p in range(n_pods)
+        for i in range(n_inner)
+        for j in range(n_inner)
+        if i != j
+    ]
+    phase2 = [
+        (p * n_inner + i, q * n_inner + i, n_inner * chunk_bytes)
+        for p in range(n_pods)
+        for q in range(n_pods)
+        for i in range(n_inner)
+        if p != q
+    ]
+    return [phase1, phase2]
 
 
 def dispatch_messages_from_table(tb, *, threshold: float = 0.0) -> dict[str, int]:

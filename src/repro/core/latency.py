@@ -28,6 +28,24 @@ schedule takes fractions of a second (Table II rows 1–3).
 Channel noise (the paper's complexity knob, 0.1–0.6) raises firing rates
 and hence both compute and traffic; we model it as a multiplier
 ``1 + κ·noise`` on both terms, reproducing Table II's monotone growth.
+
+Two backends, one API
+---------------------
+:func:`estimate` is the entry point Table-II/Fig-3b consumers call:
+
+* ``model='closed_form'`` — the α-β-congestion formulas in this module
+  (:func:`step_latency`), cheap enough for sweeps at any scale.
+* ``model='netsim'`` — the discrete-event interconnect simulator
+  (:mod:`repro.netsim`): the table's forwarding schedule is replayed
+  message by message over an explicit topology, so congestion comes
+  from simulated FIFO queueing on shared links instead of the fitted
+  ``γ`` term.  Pass ``topology=`` (default: a single switch over the
+  table's devices) and the same ``cluster`` constants — ``alpha_conn``
+  becomes the per-message injection cost, ``bytes_per_traffic_unit``
+  scales flows to wire bytes.
+
+Both return the same :class:`LatencyBreakdown`, so benchmarks flip
+between them with a flag.
 """
 from __future__ import annotations
 
@@ -42,7 +60,13 @@ from repro.core.routing import (
     level2_egress,
 )
 
-__all__ = ["ClusterModel", "LatencyBreakdown", "step_latency", "table2_row"]
+__all__ = [
+    "ClusterModel",
+    "LatencyBreakdown",
+    "estimate",
+    "step_latency",
+    "table2_row",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,10 +182,78 @@ def step_latency(
     )
 
 
+def _netsim_latency(
+    tb: RoutingTable,
+    cluster: ClusterModel,
+    *,
+    noise: float,
+    topology=None,
+) -> LatencyBreakdown:
+    """Discrete-event backend: replay the table's forwarding schedule.
+
+    Lazy-imports :mod:`repro.netsim` (keeps the closed-form path free of
+    the dependency).  The cluster constants map onto the simulator:
+    ``alpha_conn`` is charged per message at injection (the host-side
+    connection cost that sinks P2P in Table II), traffic units scale to
+    wire bytes by ``bytes_per_traffic_unit`` times the noise multiplier.
+    """
+    from repro import netsim
+
+    topo = topology or netsim.single_switch(tb.n_devices, link_bw=cluster.bw_link)
+    if topo.n_devices != tb.n_devices:
+        raise ValueError(f"topology has {topo.n_devices} devices, table {tb.n_devices}")
+    noise_mult = 1.0 + cluster.kappa * noise
+    rounds = netsim.table_rounds(tb, bytes_per_unit=cluster.bytes_per_traffic_unit * noise_mult)
+    # forwarding stages truly depend on each other (bridges aggregate
+    # only after level-1 delivers) — simulate with barriers
+    res = netsim.simulate(rounds, topo, alpha_msg=cluster.alpha_conn, barriers=True)
+    res.assert_conserved()
+    t_compute = cluster.t_compute0 * noise_mult
+    return LatencyBreakdown(
+        t_total=float(t_compute + res.t_total),
+        t_compute=float(t_compute),
+        t_conn=0.0,  # folded into the simulated per-message injection cost
+        t_serial=float(res.t_total),
+        worst_device=res.worst_device(),
+    )
+
+
+def estimate(
+    tb: RoutingTable,
+    cluster: ClusterModel = ClusterModel(),
+    *,
+    model: str = "closed_form",
+    noise: float = 0.1,
+    topology=None,
+) -> LatencyBreakdown:
+    """Step-latency estimate under routing table ``tb``, either backend.
+
+    Args:
+      model: ``'closed_form'`` (this module's α-β-congestion formulas)
+        or ``'netsim'`` (discrete-event replay over ``topology`` —
+        :mod:`repro.netsim`).
+      topology: netsim only — a :class:`repro.netsim.Topology` over the
+        table's devices; defaults to a single switch at the cluster's
+        link bandwidth.
+    """
+    if model == "closed_form":
+        return step_latency(tb, cluster, noise=noise)
+    if model == "netsim":
+        return _netsim_latency(tb, cluster, noise=noise, topology=topology)
+    raise ValueError(f"unknown latency model {model!r}")
+
+
 def table2_row(
     tb: RoutingTable,
     cluster: ClusterModel = ClusterModel(),
     noises: tuple[float, ...] = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6),
+    *,
+    model: str = "closed_form",
+    topology=None,
 ) -> list[float]:
-    """One row of Table II: step latency across channel-noise levels."""
-    return [step_latency(tb, cluster, noise=z).t_total for z in noises]
+    """One row of Table II: step latency across channel-noise levels,
+    under either latency backend (see :func:`estimate`)."""
+    return [
+        estimate(tb, cluster, model=model, noise=z, topology=topology).t_total
+        for z in noises
+    ]

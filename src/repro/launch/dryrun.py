@@ -286,14 +286,63 @@ def run_cell(
         }
         rec["roofline"] = rep.as_dict()
         rec["tokens_per_step"] = tokens
+
+        # --- netsim wall-clock preview ---------------------------------
+        # replay the per-chip collective byte totals over a two-tier pod
+        # fabric (repro.netsim, pure numpy — safe pre-jax-init): intra
+        # bytes ride the pod ring, cross-pod bytes hit counterparts
+        # through the oversubscribed spine, so the dry run previews a
+        # critical-path latency, not just byte volume
+        try:
+            from repro import netsim
+
+            cross = float(totals.cross_pod_bytes)
+            intra = max(float(totals.coll_ring_bytes) - cross, 0.0)
+            # pod extent capped at the mesh size so the ring neighbor
+            # wraps inside the device range on sub-pod (test) meshes
+            pod = min(POD_SIZE, n_dev)
+            multi = n_dev > pod and n_dev % pod == 0
+            topo = (
+                netsim.two_tier(n_dev, pod)
+                if multi
+                else netsim.single_switch(n_dev)
+            )
+            intra_msgs = [
+                netsim.Message(
+                    d,
+                    (d // pod) * pod + (d + 1) % pod,
+                    int(intra),
+                    tag="intra",
+                )
+                for d in range(n_dev)
+                if intra > 0 and pod > 1
+            ]
+            cross_msgs = [
+                netsim.Message(d, (d + pod) % n_dev, int(cross), tag="cross")
+                for d in range(n_dev)
+                if multi and cross > 0
+            ]
+            sim = netsim.simulate([intra_msgs, cross_msgs], topo)
+            sim.assert_conserved()
+            rec["netsim"] = {
+                "topology": topo.name,
+                "critical_path_ms": round(sim.t_total * 1e3, 3),
+                "cross_pod_bytes_per_chip": round(cross),
+                "intra_bytes_per_chip": round(intra),
+            }
+        except Exception as e:  # preview must never fail the cell
+            rec["netsim"] = {"error": str(e)}
+
         if verbose:
+            ns = rec["netsim"].get("critical_path_ms", "?")
             print(
                 f"[{arch} × {shape_name} × {mesh_name} × {tag}] "
                 f"compile {t_compile:.0f}s | "
                 f"terms c/m/x = {rep.compute_s*1e3:.1f}/{rep.memory_s*1e3:.1f}/"
                 f"{rep.collective_s*1e3:.1f} ms | dominant={rep.dominant} | "
                 f"roofline {rep.roofline_fraction:.2%} | "
-                f"mem {rec['memory'].get('total_per_device_gib', '?')} GiB",
+                f"mem {rec['memory'].get('total_per_device_gib', '?')} GiB | "
+                f"netsim {ns} ms",
                 flush=True,
             )
     except Exception as e:

@@ -1,0 +1,81 @@
+"""Discrete-event machinery: messages, delivery records, event queue.
+
+The simulator's unit of work is a :class:`Message` — one point-to-point
+transfer between device NICs, produced by the adapters in
+:mod:`repro.netsim.adapters` from the *actual executed artifacts* of
+this repo (``exchange_schedule`` rounds, :class:`~repro.snn.ragged.RaggedPlan`
+perms, Algorithm-2 routing tables).  :class:`EventQueue` is a thin heap
+wrapper that guarantees deterministic ordering: events at equal
+timestamps pop in insertion order (a monotone sequence number breaks
+ties), so two runs of the same schedule produce identical timelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+__all__ = ["Message", "Delivery", "EventQueue"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Message:
+    """One point-to-point transfer between device NICs.
+
+    Attributes:
+      src: sending device id.
+      dst: receiving device id (``src == dst`` is local, zero-cost).
+      nbytes: wire bytes.
+      round: schedule round the message belongs to.  Round semantics are
+        chosen at simulation time: by default rounds *pipeline* (each
+        NIC serializes its sends in round order, no global sync);
+        schedules whose later rounds consume earlier ones must pass
+        ``barriers=True`` to :func:`repro.netsim.simulate`.
+      tag: free-form provenance label ('sparse', 'ragged', 'level1', ...).
+    """
+
+    src: int
+    dst: int
+    nbytes: int
+    round: int = 0
+    tag: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Delivery:
+    """Per-message timeline record (``collect_events=True``)."""
+
+    src: int
+    dst: int
+    nbytes: int
+    round: int
+    tag: str
+    t_inject: float
+    t_deliver: float
+    queue_wait: float  # total time spent waiting behind busy links
+    n_hops: int
+
+
+class EventQueue:
+    """Min-heap of ``(time, seq, payload)`` with FIFO tie-breaking."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, object]] = []
+        self._seq = 0
+        self.pushed = 0
+        self.popped = 0
+
+    def push(self, time: float, payload: object) -> None:
+        heapq.heappush(self._heap, (time, self._seq, payload))
+        self._seq += 1
+        self.pushed += 1
+
+    def pop(self) -> tuple[float, object]:
+        time, _, payload = heapq.heappop(self._heap)
+        self.popped += 1
+        return time, payload
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

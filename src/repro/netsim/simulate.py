@@ -1,0 +1,255 @@
+"""The discrete-event interconnect simulator.
+
+Store-and-forward at message granularity with FIFO link serialization:
+a message traversing link ``l`` occupies it for ``alpha_l + nbytes ·
+beta_l`` seconds, starting no earlier than the link frees up — queueing
+behind shared links IS the congestion model, so hot leaf↔spine uplinks
+and overloaded bridge NICs emerge from the schedule instead of being
+postulated (the α–β–congestion model of the closed-form backend, with
+the congestion term *simulated* rather than fitted).
+
+Round semantics match the executed schedules: by default rounds
+*pipeline* (injected in round-major order, so each device's sends
+serialize through its NIC in round order — back-to-back ``ppermute``
+rounds carry no cross-round data dependency), while ``barriers=True``
+inserts a global barrier after each round for schedules whose later
+stages consume earlier ones (Algorithm-2 forwarding).  The simulator is
+pure numpy/python (no jax) and fully deterministic — equal-time events
+process in injection order.
+
+Conservation is structural and audited: :class:`SimResult` carries
+injected/delivered message and byte counts plus the event-queue
+counters, and :meth:`SimResult.assert_conserved` verifies every
+injected message was delivered exactly once with no event-queue leaks
+(property-tested in ``tests/test_netsim.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.netsim.events import Delivery, EventQueue, Message
+from repro.netsim.topology import Topology
+
+__all__ = ["SimResult", "simulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Outcome of one simulated schedule replay.
+
+    Attributes:
+      t_total: critical-path latency — last delivery, seconds.
+      round_ends: absolute time each round's last message delivered
+        (the per-round timeline; under pipelined injection rounds
+        overlap, under ``barriers=True`` differences are per-round
+        makespans).
+      n_injected / n_delivered: message conservation counters.
+      bytes_injected / bytes_delivered: byte conservation counters.
+      link_busy_s: ``float64[n_links]`` seconds each link spent
+        transmitting (utilization = busy / t_total).
+      link_bytes: ``float64[n_links]`` bytes each link carried.
+      link_msgs: ``int64[n_links]`` transits per link.
+      queue_pushed / queue_popped: event-queue audit counters (equal ⇔
+        no leaked events).
+      topology: the topology simulated (for link-kind reports).
+      deliveries: per-message :class:`Delivery` records when
+        ``collect_events=True`` (else empty).
+    """
+
+    t_total: float
+    round_ends: tuple[float, ...]
+    n_injected: int
+    n_delivered: int
+    bytes_injected: int
+    bytes_delivered: int
+    link_busy_s: np.ndarray
+    link_bytes: np.ndarray
+    link_msgs: np.ndarray
+    queue_pushed: int
+    queue_popped: int
+    topology: Topology
+    deliveries: tuple[Delivery, ...] = ()
+
+    @property
+    def round_makespans(self) -> tuple[float, ...]:
+        """Per-round durations — meaningful under ``barriers=True``
+        (pipelined rounds overlap, so differences can be ≤ 0 there)."""
+        out, prev = [], 0.0
+        for e in self.round_ends:
+            out.append(e - prev)
+            prev = e
+        return tuple(out)
+
+    def bytes_by_kind(self) -> dict[str, float]:
+        """Total bytes carried per link kind ('nic_up', 'leaf_up', ...)."""
+        out: dict[str, float] = {}
+        for lnk, b in zip(self.topology.links, self.link_bytes):
+            out[lnk.kind] = out.get(lnk.kind, 0.0) + float(b)
+        return out
+
+    def utilization_by_kind(self) -> dict[str, float]:
+        """Peak link utilization (busy / t_total) per link kind."""
+        if self.t_total <= 0:
+            return {}
+        out: dict[str, float] = {}
+        for lnk, busy in zip(self.topology.links, self.link_busy_s):
+            u = float(busy) / self.t_total
+            out[lnk.kind] = max(out.get(lnk.kind, 0.0), u)
+        return out
+
+    def bottleneck_link(self) -> int:
+        """Id of the busiest link (the congestion point)."""
+        return int(np.argmax(self.link_busy_s))
+
+    def worst_device(self) -> int:
+        """Device whose egress links were busiest — the straggler the
+        closed-form model's per-device max corresponds to."""
+        egress = self.topology.device_egress_links()
+        busy = [float(sum(self.link_busy_s[l] for l in ls)) for ls in egress]
+        return int(np.argmax(busy))
+
+    def assert_conserved(self) -> None:
+        """Every injected message delivered exactly once, no queue leaks."""
+        if self.n_delivered != self.n_injected:
+            raise AssertionError(
+                f"{self.n_injected} messages injected, {self.n_delivered} delivered"
+            )
+        if self.bytes_delivered != self.bytes_injected:
+            raise AssertionError(
+                f"{self.bytes_injected} bytes injected, "
+                f"{self.bytes_delivered} delivered"
+            )
+        if self.queue_pushed != self.queue_popped:
+            raise AssertionError(
+                f"event-queue leak: {self.queue_pushed} pushed, "
+                f"{self.queue_popped} popped"
+            )
+
+
+def simulate(
+    rounds: Sequence[Sequence[Message]],
+    topo: Topology,
+    *,
+    alpha_msg: float = 0.0,
+    barriers: bool = False,
+    collect_events: bool = False,
+    t0: float = 0.0,
+) -> SimResult:
+    """Replay ``rounds`` of messages over ``topo``.
+
+    Args:
+      rounds: per-round message batches (the shape every adapter in
+        :mod:`repro.netsim.adapters` produces).
+      topo: the interconnect.
+      alpha_msg: extra per-message cost charged at the *first* hop —
+        models host-side connection setup (the closed-form model's
+        ``alpha_conn``); with thousands of P2P flows these serialize at
+        the source NIC, reproducing the paper's connection-count
+        collapse.
+      barriers: synchronization between rounds.  ``False`` (default)
+        *pipelines*: every message injects at ``t0`` in round-major
+        order, so a device's sends serialize through its NIC in round
+        order but independent devices never wait — the faithful model of
+        back-to-back ``ppermute`` rounds, which carry no cross-round
+        data dependency.  ``True`` inserts a global barrier after each
+        round — correct when later rounds *consume* earlier ones
+        (Algorithm-2 forwarding: bridges aggregate only after level-1
+        delivers).
+      collect_events: keep a :class:`Delivery` record per message.
+
+    Returns:
+      :class:`SimResult`; call ``assert_conserved()`` to audit it.
+    """
+    n_links = topo.n_links
+    free = np.zeros(n_links)
+    busy = np.zeros(n_links)
+    link_bytes = np.zeros(n_links)
+    link_msgs = np.zeros(n_links, dtype=np.int64)
+    q = EventQueue()
+    deliveries: list[Delivery] = []
+    n_rounds = len(rounds)
+    round_ends = np.full(n_rounds, float(t0))
+    n_inj = n_del = 0
+    bytes_inj = bytes_del = 0
+    t_round = float(t0)
+
+    if barriers:
+        batches = [[(ri, m) for m in rnd] for ri, rnd in enumerate(rounds)]
+    else:  # one injection wave, round-major order
+        batches = [[(ri, m) for ri, rnd in enumerate(rounds) for m in rnd]]
+
+    for batch in batches:
+        paths = [topo.route(m.src, m.dst) for _, m in batch]
+        waits = [0.0] * len(batch)
+        t_end = t_round
+        for mi, ((ri, m), path) in enumerate(zip(batch, paths)):
+            n_inj += 1
+            bytes_inj += m.nbytes
+            if not path:  # local delivery (src == dst)
+                n_del += 1
+                bytes_del += m.nbytes
+                if collect_events:
+                    deliveries.append(
+                        Delivery(m.src, m.dst, m.nbytes, m.round, m.tag, t_round, t_round, 0.0, 0)
+                    )
+                continue
+            q.push(t_round, (mi, 0))
+        while q:
+            t, payload = q.pop()
+            mi, hop = payload
+            (ri, m), path = batch[mi], paths[mi]
+            lid = path[hop]
+            lnk = topo.links[lid]
+            dur = lnk.alpha + m.nbytes * lnk.beta
+            if hop == 0:
+                dur += alpha_msg
+            start = t if t >= free[lid] else free[lid]
+            waits[mi] += start - t
+            end = start + dur
+            free[lid] = end
+            busy[lid] += dur
+            link_bytes[lid] += m.nbytes
+            link_msgs[lid] += 1
+            if hop + 1 < len(path):
+                q.push(end, (mi, hop + 1))
+            else:
+                n_del += 1
+                bytes_del += m.nbytes
+                if end > t_end:
+                    t_end = end
+                if end > round_ends[ri]:
+                    round_ends[ri] = end
+                if collect_events:
+                    deliveries.append(
+                        Delivery(
+                            m.src,
+                            m.dst,
+                            m.nbytes,
+                            m.round,
+                            m.tag,
+                            t_round,
+                            end,
+                            waits[mi],
+                            len(path),
+                        )
+                    )
+        t_round = t_end  # with barriers: next round starts after the slowest
+
+    return SimResult(
+        t_total=(t_round - t0) if n_rounds else 0.0,
+        round_ends=tuple(float(e) for e in round_ends),
+        n_injected=n_inj,
+        n_delivered=n_del,
+        bytes_injected=bytes_inj,
+        bytes_delivered=bytes_del,
+        link_busy_s=busy,
+        link_bytes=link_bytes,
+        link_msgs=link_msgs,
+        queue_pushed=q.pushed,
+        queue_popped=q.popped,
+        topology=topo,
+        deliveries=tuple(deliveries),
+    )

@@ -16,7 +16,12 @@ from repro.snn.engine import (
     expand_synapses,
     expand_synapses_sparse,
 )
-from repro.snn.sparse import BlockSynapses, exchange_schedule, exchange_volume
+from repro.snn.sparse import (
+    BlockSynapses,
+    exchange_messages,
+    exchange_schedule,
+    exchange_volume,
+)
 from repro.snn.ragged import (
     RaggedPlan,
     RaggedRound,
@@ -43,6 +48,7 @@ __all__ = [
     "expand_synapses",
     "expand_synapses_sparse",
     "BlockSynapses",
+    "exchange_messages",
     "exchange_schedule",
     "exchange_volume",
     "RaggedPlan",

@@ -130,6 +130,15 @@ class DistributedSNN:
         device per destination group (``exchange='ragged'``); ``None``
         spreads bridge duty round-robin.  Derive from an Algorithm-2
         table with :func:`repro.snn.ragged.bridge_inner_from_table`.
+      ragged_scatter: how the ragged executor lands received payloads in
+        the block buffer — ``'fused'`` (default) concatenates every
+        round's payload and indices and runs ONE
+        ``jax.ops.segment_sum`` over all rounds (the ROADMAP's
+        fused-scatter item: one scatter op per step instead of one per
+        round); ``'per_round'`` keeps the original per-round
+        ``buf.at[...].add``.  Bit-identical (each non-trash slot
+        receives at most one contribution, so no reassociation) —
+        pinned by ``test_ragged_scatter_modes_bit_identical``.
     """
 
     mesh: Mesh
@@ -140,12 +149,15 @@ class DistributedSNN:
     syn: BlockSynapses | None = None
     policy: KernelPolicy = KernelPolicy()
     bridge_inner: np.ndarray | None = None
+    ragged_scatter: str = "fused"
 
     def __post_init__(self):
         if self.params is None:
             raise ValueError("params is required")
         if self.exchange not in ("flat", "two_level", "sparse", "ragged"):
             raise ValueError(self.exchange)
+        if self.ragged_scatter not in ("fused", "per_round"):
+            raise ValueError(self.ragged_scatter)
         if self.exchange == "two_level" and len(self.mesh.axis_names) < 2:
             raise ValueError("two_level exchange needs a 2-D mesh")
         if self.w_syn is None and self.syn is None:
@@ -342,13 +354,29 @@ class DistributedSNN:
                 buf = buf.at[(gid - shift) % g].set(recv)
             return buf.reshape(n_dev, b)
 
+        fused = self.ragged_scatter == "fused"
+
         def gather_blocks_ragged(spikes_loc, idx_loc):
             """Ragged level-2: bridge-only packed ppermute + fast-axis
-            broadcast + scatter into block slots (trash slot ``rb``)."""
+            broadcast + scatter into block slots (trash slot ``rb``).
+
+            The scatter runs in one of two modes: ``'per_round'`` lands
+            each round's payload with its own ``buf.at[...].add``;
+            ``'fused'`` collects every round's payload and flat buffer
+            indices and lands them all (plus the local group block) in a
+            single ``segment_sum`` — one scatter op per step.  Every
+            non-trash slot receives at most one contribution (rows are
+            disjoint per shift, columns unique within a round), so the
+            two modes are bit-identical.
+            """
             s_grp = gather_group(spikes_loc)
             gid = jax.lax.axis_index(slow)
-            buf = jnp.zeros((g, rb + 1), jnp.float32)
-            buf = buf.at[gid, :rb].set(s_grp)
+            parts = [s_grp]  # local block → own row, columns [0, rb)
+            flat_idx = [gid * (rb + 1) + jnp.arange(rb, dtype=jnp.int32)]
+            buf = None
+            if not fused:
+                buf = jnp.zeros((g, rb + 1), jnp.float32)
+                buf = buf.at[gid, :rb].set(s_grp)
             for rnd, idx in zip(live, idx_loc):
                 send_idx = idx[0, 0]  # [K_r] columns of s_grp to pack
                 recv_idx = idx[0, 1]  # [K_r] slots (rb = trash)
@@ -358,7 +386,18 @@ class DistributedSNN:
                     # only the receiving bridge got data; everyone else
                     # holds zeros, so a psum is the intra-group broadcast
                     recv = jax.lax.psum(recv, inner)
-                buf = buf.at[(gid - rnd.shift) % g, recv_idx].add(recv)
+                row = (gid - rnd.shift) % g
+                if fused:
+                    parts.append(recv)
+                    flat_idx.append(row * (rb + 1) + recv_idx)
+                else:
+                    buf = buf.at[row, recv_idx].add(recv)
+            if fused:
+                buf = jax.ops.segment_sum(
+                    jnp.concatenate(parts),
+                    jnp.concatenate(flat_idx),
+                    num_segments=g * (rb + 1),
+                ).reshape(g, rb + 1)
             return buf[:, :rb].reshape(n_dev, b)
 
         @functools.partial(

@@ -100,6 +100,21 @@ class RaggedPlan:
         static-shape constraint pads up from)."""
         return sum(4 * int(cols.size) for cols in self.pair_cols.values())
 
+    def round_messages(self) -> list[list[tuple[int, int, int]]]:
+        """Flat-device ``(src, dst, nbytes)`` triples per executed round.
+
+        The wire-level view of the plan: one padded ``K_r · 4``-byte
+        payload per ``(bridge, bridge)`` pair of each round's joint-axis
+        ``ppermute`` — exactly what the ragged executor moves, so the
+        total equals :attr:`bytes_per_step` (padding included).  This is
+        the replay input :mod:`repro.netsim` pins its byte accounting
+        against ``exchange_volume(..., plan=...)['ragged']`` with.
+        """
+        return [
+            [(src, dst, rnd.width * 4) for src, dst in rnd.perm]
+            for rnd in self.rounds
+        ]
+
 
 def bridge_inner_from_table(tb) -> np.ndarray:
     """Map an Algorithm-2 routing table's bridges to mesh inner indices.

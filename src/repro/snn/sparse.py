@@ -24,6 +24,7 @@ import numpy as np
 __all__ = [
     "BlockSynapses",
     "exchange_schedule",
+    "exchange_messages",
     "exchange_volume",
 ]
 
@@ -205,6 +206,41 @@ def exchange_schedule(
         ]
         rounds.append(pairs)
     return rounds
+
+
+def exchange_messages(
+    gmask: np.ndarray,
+    mesh_shape: tuple[int, ...],
+    block_bytes: int,
+) -> list[list[tuple[int, int, int]]]:
+    """Flat-device ``(src, dst, nbytes)`` triples per ``ppermute`` round.
+
+    The wire-level view of :func:`exchange_schedule`, mirroring exactly
+    what :meth:`repro.snn.distributed.DistributedSNN` executes with
+    ``exchange='sparse'``: each scheduled group pair ``(gs, gd)`` runs
+    once per inner mesh position (``ppermute`` over the slow axis is
+    per inner index), and every message carries the aggregated
+    ``R · B`` group spike block (``r · block_bytes`` wire bytes).  The
+    sum over all triples therefore equals
+    ``exchange_volume(...)['sparse']`` for the same mask — the
+    invariant :mod:`repro.netsim` replays pin their byte accounting to.
+    On a 1-D mesh (``mesh_shape=(n,)``) every device is its own group
+    and each triple moves one ``block_bytes`` block.
+
+    Pass a full (off-diagonal) ``gmask`` to obtain the flat schedule's
+    triples — ``exchange_volume(...)['flat']`` by the same accounting.
+    """
+    if len(mesh_shape) == 1:
+        g, r = int(mesh_shape[0]), 1
+    else:
+        g, r = int(mesh_shape[0]), int(np.prod(mesh_shape[1:]))
+    if gmask.shape != (g, g):
+        raise ValueError(f"gmask {gmask.shape} incompatible with G = {g}")
+    nbytes = r * block_bytes
+    return [
+        [(gs * r + i, gd * r + i, nbytes) for gs, gd in pairs for i in range(r)]
+        for pairs in exchange_schedule(gmask)
+    ]
 
 
 def exchange_volume(

@@ -1,0 +1,374 @@
+"""netsim: topology routing, deterministic event simulation,
+conservation invariants, and byte-exact replay of the repo's executed
+exchange schedules (sparse ppermute rounds, ragged plans, Algorithm-2
+tables, hierarchical all-to-all)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro import netsim
+from repro.core import (
+    ClusterModel,
+    estimate,
+    p2p_routing,
+    step_latency,
+    two_level_routing,
+)
+from repro.core.hierarchical import dispatch_bytes, dispatch_messages
+from repro.snn import BlockSynapses, build_ragged_plan, exchange_volume
+from tests.test_snn_sparse import _clustered_w
+
+
+def _topos(n: int):
+    pod = next(p for p in (4, 2, 1) if n % p == 0)
+    out = [netsim.single_switch(n), netsim.ring(n)]
+    if pod > 1:
+        out += [netsim.two_tier(n, pod), netsim.fat_tree(n, pod)]
+    return out
+
+
+class TestTopology:
+    @pytest.mark.parametrize("n", [4, 8, 12])
+    def test_routes_are_connected_paths(self, n):
+        """Every route chains src → ... → dst through consecutive links."""
+        for topo in _topos(n):
+            for s in range(n):
+                for d in range(n):
+                    path = topo.route(s, d)
+                    if s == d:
+                        assert path == ()
+                        continue
+                    assert len(path) >= 1
+                    links = [topo.links[l] for l in path]
+                    assert links[0].src == s and links[-1].dst == d
+                    for a, b in zip(links, links[1:]):
+                        assert a.dst == b.src
+
+    def test_ring_takes_shorter_arc(self):
+        topo = netsim.ring(8)
+        assert len(topo.route(0, 3)) == 3
+        assert len(topo.route(0, 5)) == 3  # counterclockwise
+        assert len(topo.route(0, 4)) == 4  # tie → clockwise
+
+    def test_two_tier_oversubscription_slows_spine(self):
+        topo = netsim.two_tier(8, 4, dcn_oversub=4.0)
+        up = topo.links[topo.params["leaf_up"][0]]
+        nic = topo.links[topo.params["up"][0]]
+        # uplink beta = oversub / (pod · bw): with oversub == pod they equal
+        assert up.beta == pytest.approx(nic.beta)
+        fast = netsim.two_tier(8, 4, dcn_oversub=1.0)
+        assert fast.links[fast.params["leaf_up"][0]].beta < up.beta
+
+    def test_config_schema_roundtrip(self):
+        cfg = {"kind": "two_tier", "n_devices": 16, "pod_size": 4, "dcn_oversub": 2.0}
+        topo = netsim.topology_from_config(cfg)
+        assert topo.kind == "two_tier" and topo.n_devices == 16
+        with pytest.raises(ValueError, match="unknown topology kind"):
+            netsim.topology_from_config({"kind": "torus", "n_devices": 4})
+        with pytest.raises(ValueError, match="pod_size"):
+            netsim.two_tier(10, 4)
+
+    def test_out_of_range_devices_rejected(self):
+        topo = netsim.single_switch(4)
+        with pytest.raises(ValueError, match="outside"):
+            topo.route(0, 4)
+
+
+class TestSimulate:
+    def test_single_message_alpha_beta(self):
+        """Latency of one uncontended message is exactly Σ_hops (α + B·β)."""
+        topo = netsim.single_switch(4, link_bw=1e9, alpha=1e-6)
+        res = netsim.simulate([[netsim.Message(0, 1, 1000)]], topo)
+        res.assert_conserved()
+        assert res.t_total == pytest.approx(2 * (1e-6 + 1000 / 1e9))
+
+    def test_fifo_serialization_is_congestion(self):
+        """Two messages sharing a NIC serialize (the second waits one
+        link-serialization unit, then pipelines down its own hop); on
+        disjoint NICs they run fully in parallel."""
+        topo = netsim.single_switch(4, link_bw=1e9, alpha=0.0)
+        unit = 1000 / 1e9  # per-link serialization of one message
+        shared = netsim.simulate([[netsim.Message(0, 1, 1000), netsim.Message(0, 2, 1000)]], topo)
+        disjoint = netsim.simulate([[netsim.Message(0, 1, 1000), netsim.Message(2, 3, 1000)]], topo)
+        assert disjoint.t_total == pytest.approx(2 * unit)
+        assert shared.t_total == pytest.approx(disjoint.t_total + unit)
+
+    def test_alpha_msg_charged_once_at_injection(self):
+        topo = netsim.single_switch(2, link_bw=1e9, alpha=0.0)
+        base = netsim.simulate([[netsim.Message(0, 1, 0)]], topo)
+        conn = netsim.simulate([[netsim.Message(0, 1, 0)]], topo, alpha_msg=5e-4)
+        assert conn.t_total - base.t_total == pytest.approx(5e-4)
+
+    def test_barriers_vs_pipelined(self):
+        """Disjoint-device rounds overlap when pipelined and serialize
+        under barriers."""
+        topo = netsim.single_switch(4, link_bw=1e9, alpha=0.0)
+        rounds = [
+            [netsim.Message(0, 1, 1000)],
+            [netsim.Message(2, 3, 1000, round=1)],
+        ]
+        piped = netsim.simulate(rounds, topo)
+        barred = netsim.simulate(rounds, topo, barriers=True)
+        assert piped.t_total == pytest.approx(barred.t_total / 2)
+        # same-device rounds serialize at the NIC either way; pipelining
+        # only saves the second message's store-and-forward overlap
+        unit = 1000 / 1e9
+        rounds2 = [
+            [netsim.Message(0, 1, 1000)],
+            [netsim.Message(0, 2, 1000, round=1)],
+        ]
+        piped2 = netsim.simulate(rounds2, topo)
+        barred2 = netsim.simulate(rounds2, topo, barriers=True)
+        assert piped2.t_total == pytest.approx(3 * unit)
+        assert barred2.t_total == pytest.approx(4 * unit)
+
+    def test_local_delivery_is_free(self):
+        topo = netsim.single_switch(2)
+        res = netsim.simulate([[netsim.Message(1, 1, 10**9)]], topo)
+        res.assert_conserved()
+        assert res.t_total == 0.0 and res.n_delivered == 1
+
+    def test_deterministic_timelines(self):
+        rng = np.random.default_rng(0)
+        msgs = [
+            netsim.Message(int(s), int(d), int(b))
+            for s, d, b in zip(
+                rng.integers(0, 8, 64),
+                rng.integers(0, 8, 64),
+                rng.integers(1, 10**6, 64),
+            )
+        ]
+        topo = netsim.two_tier(8, 4)
+        a = netsim.simulate([msgs], topo, collect_events=True)
+        b = netsim.simulate([msgs], topo, collect_events=True)
+        assert a.deliveries == b.deliveries
+        assert a.t_total == b.t_total
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_conservation_random_schedules(self, seed):
+        """Every injected message is delivered exactly once and the
+        event queue drains — on every topology, multi-round, with
+        self-messages and zero-byte messages mixed in."""
+        rng = np.random.default_rng(seed)
+        n = 8
+        rounds = []
+        for r in range(3):
+            k = int(rng.integers(1, 40))
+            rounds.append(
+                [
+                    netsim.Message(
+                        int(rng.integers(0, n)),
+                        int(rng.integers(0, n)),
+                        int(rng.integers(0, 10**5)),
+                        round=r,
+                    )
+                    for _ in range(k)
+                ]
+            )
+        injected = sorted((m.src, m.dst, m.nbytes, m.round) for rnd in rounds for m in rnd)
+        for topo in _topos(n):
+            for barriers in (False, True):
+                res = netsim.simulate(rounds, topo, barriers=barriers, collect_events=True)
+                res.assert_conserved()
+                delivered = sorted((d.src, d.dst, d.nbytes, d.round) for d in res.deliveries)
+                assert delivered == injected, topo.name
+                # link transit counts account exactly for every hop
+                hops = sum(len(topo.route(m.src, m.dst)) for rnd in rounds for m in rnd)
+                assert int(res.link_msgs.sum()) == hops
+
+
+class TestScheduleReplay:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_sparse_and_flat_bytes_match_exchange_volume(self, seed):
+        """Replayed bytes == exchange_volume for random masks, 1-D and
+        (4, 2) meshes."""
+        rng = np.random.default_rng(seed)
+        n, bb = 8, 64
+        mask = rng.random((n, n)) < 0.35
+        np.fill_diagonal(mask, True)
+        for mesh in [(n,), (4, 2)]:
+            vol = exchange_volume(
+                mask,
+                mesh_shape=None if len(mesh) == 1 else mesh,
+                block_bytes=bb,
+            )
+            sp = netsim.sparse_rounds(mask, mesh, bb)
+            fl = netsim.flat_rounds(mesh, bb)
+            assert netsim.total_bytes(sp) == vol["sparse"]
+            assert netsim.total_bytes(fl) == vol["flat"]
+
+    @pytest.mark.parametrize("seed", [3, 4, 5])
+    def test_ragged_bytes_match_exchange_volume(self, seed):
+        w = _clustered_w(64, 8, extra=((0, 1), (1, 3)), seed=seed)
+        syn = BlockSynapses.from_dense(w, 8)
+        plan = build_ragged_plan(syn, (4, 2))
+        vol = exchange_volume(
+            syn.mask(),
+            mesh_shape=(4, 2),
+            block_bytes=syn.block_size * 4,
+            plan=plan,
+        )
+        rg = netsim.ragged_rounds(plan)
+        assert netsim.total_bytes(rg) == vol["ragged"] == plan.bytes_per_step
+
+    def test_replay_latency_ordering(self):
+        """ragged ≤ sparse < flat on the switch-based fabrics — the
+        gated netsim claim at test scale."""
+        w = _clustered_w(64, 8)
+        syn = BlockSynapses.from_dense(w, 8)
+        bb = syn.block_size * 4
+        plan = build_ragged_plan(syn, (4, 2))
+        rounds = {
+            "flat": netsim.flat_rounds((4, 2), bb),
+            "sparse": netsim.sparse_rounds(syn.mask(), (4, 2), bb),
+            "ragged": netsim.ragged_rounds(plan),
+        }
+        for topo in [netsim.single_switch(8), netsim.two_tier(8, 2),
+                     netsim.fat_tree(8, 2)]:
+            t = {}
+            for name, rnds in rounds.items():
+                res = netsim.simulate(rnds, topo, alpha_msg=2e-6)
+                res.assert_conserved()
+                t[name] = res.t_total
+            assert t["ragged"] <= t["sparse"] < t["flat"], (topo.name, t)
+
+    def test_a2a_rounds_match_dispatch_accounting(self):
+        """Message counts and cross-pod bytes of the all-to-all replay
+        equal the analytic dispatch accounting."""
+        pods, inner, chunk = 3, 4, 128
+        for two_level in (False, True):
+            rounds = netsim.a2a_rounds(pods, inner, chunk, two_level=two_level)
+            want = dispatch_messages(pods, inner, two_level=two_level)
+            cross = sum(
+                m.nbytes
+                for rnd in rounds
+                for m in rnd
+                if m.src // inner != m.dst // inner
+            )
+            got_cross_msgs = sum(
+                1
+                for rnd in rounds
+                for m in rnd
+                if m.src // inner != m.dst // inner
+            )
+            assert got_cross_msgs == want["cross_pod"]
+            wb = dispatch_bytes(pods, inner, chunk, two_level=two_level)
+            assert cross == wb["cross_pod"]
+
+    def test_two_level_a2a_wins_on_message_bound_fabric(self):
+        """With a per-message cost, the bridge-aggregated all-to-all
+        beats the flat one on the pod fabric (the Fig. 4 claim restated
+        as simulated latency)."""
+        topo = netsim.two_tier(12, 4)
+        flat = netsim.simulate(
+            netsim.a2a_rounds(3, 4, 64, two_level=False),
+            topo,
+            alpha_msg=1e-4,
+            barriers=True,
+        )
+        two = netsim.simulate(
+            netsim.a2a_rounds(3, 4, 64, two_level=True),
+            topo,
+            alpha_msg=1e-4,
+            barriers=True,
+        )
+        flat.assert_conserved()
+        two.assert_conserved()
+        assert two.t_total < flat.t_total
+
+
+class TestTableReplay:
+    def _table(self, *, grouped: bool, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        n = 12
+        t = rng.random((n, n)) * (rng.random((n, n)) < 0.4)
+        t = t + t.T
+        np.fill_diagonal(t, 0.0)
+        wg = np.ones(n)
+        if grouped:
+            return two_level_routing(t, wg, 3, grouping="greedy")
+        return p2p_routing(t, wg)
+
+    def test_p2p_single_round_per_connection(self):
+        tb = self._table(grouped=False)
+        rounds = netsim.table_rounds(tb, bytes_per_unit=100.0)
+        assert len(rounds) == 1
+        tm = tb.device_traffic
+        n_conn = sum(1 for s, d in zip(tm.rows(), tm.indices) if s != d)
+        assert len(rounds[0]) == n_conn
+
+    def test_two_level_stages_and_conservation(self):
+        tb = self._table(grouped=True)
+        rounds = netsim.table_rounds(tb, bytes_per_unit=100.0)
+        assert len(rounds) == 3
+        tags = [{m.tag for m in rnd} for rnd in rounds]
+        assert tags[0] <= {"level1"} and tags[1] <= {"level2"}
+        assert tags[2] <= {"fanout"}
+        # level-2 messages run bridge → bridge across groups
+        for m in rounds[1]:
+            assert tb.group_of[m.src] != tb.group_of[m.dst]
+        # at most one message per connection (no duplicate (src, dst))
+        for rnd in rounds:
+            pairs = [(m.src, m.dst) for m in rnd]
+            assert len(pairs) == len(set(pairs))
+        res = netsim.simulate(rounds, netsim.single_switch(tb.n_devices), barriers=True)
+        res.assert_conserved()
+
+    def test_estimate_api_both_backends(self):
+        tb = self._table(grouped=True)
+        closed = estimate(tb, model="closed_form", noise=0.2)
+        assert closed.t_total == step_latency(tb, noise=0.2).t_total
+        sim = estimate(tb, model="netsim", noise=0.2)
+        assert sim.t_total > sim.t_compute > 0
+        assert 0 <= sim.worst_device < tb.n_devices
+        with pytest.raises(ValueError, match="unknown latency model"):
+            estimate(tb, model="exact")
+        with pytest.raises(ValueError, match="devices"):
+            estimate(tb, model="netsim", topology=netsim.single_switch(5))
+
+    def test_estimate_netsim_monotone_in_noise(self):
+        tb = self._table(grouped=True)
+        cluster = ClusterModel(bytes_per_traffic_unit=1e6)
+        ts = [
+            estimate(tb, cluster, model="netsim", noise=z).t_total
+            for z in (0.1, 0.3, 0.6)
+        ]
+        assert ts[0] < ts[1] < ts[2]
+
+
+class TestWhatIf:
+    def _plan(self):
+        w = _clustered_w(64, 8, extra=((0, 1), (0, 2)))
+        syn = BlockSynapses.from_dense(w, 8)
+        return build_ragged_plan(syn, (4, 2))
+
+    def test_sharding_degenerates_at_r1(self):
+        """On a 1-D plan (R = 1) the sharded schedule IS the ragged one."""
+        w = _clustered_w(32, 4)
+        syn = BlockSynapses.from_dense(w, 4)
+        plan = build_ragged_plan(syn, (4, 1))
+        assert netsim.sharded_ragged_rounds(plan) == [
+            [
+                netsim.Message(m.src, m.dst, m.nbytes, m.round, "ragged_sharded")
+                for m in rnd
+            ]
+            for rnd in netsim.ragged_rounds(plan)
+        ]
+
+    def test_sharded_bytes_only_grow_by_padding(self):
+        plan = self._plan()
+        base = netsim.total_bytes(netsim.ragged_rounds(plan))
+        shard = netsim.total_bytes(netsim.sharded_ragged_rounds(plan))
+        r = plan.mesh_shape[1]
+        assert base <= shard <= base + sum(4 * (r - 1) * len(rnd.pairs) for rnd in plan.rounds)
+
+    def test_wide_payloads_flip_the_verdict(self):
+        """Sharding loses in the α-dominated regime and wins once
+        payloads are wide (the ROADMAP question, answered by simulation)."""
+        plan = self._plan()
+        topos = {"fat_tree": netsim.fat_tree(8, 2)}
+        narrow = netsim.payload_sharding_whatif(plan, topos, alpha_msg=2e-6, byte_scale=1.0)
+        wide = netsim.payload_sharding_whatif(plan, topos, alpha_msg=2e-6, byte_scale=65536.0)
+        assert wide["fat_tree"]["speedup"] > narrow["fat_tree"]["speedup"]
+        assert wide["fat_tree"]["speedup"] > 1.0

@@ -446,6 +446,33 @@ print("OK")
 """
         assert "OK" in run_devices(code)
 
+    def test_ragged_scatter_modes_bit_identical(self):
+        """The fused single-``segment_sum`` scatter (ROADMAP item: one
+        scatter op per step instead of one per round) is bit-identical
+        to the original per-round ``buf.at[...].add`` path on a 1-D and
+        an (8, 4) mesh — every non-trash buffer slot receives at most
+        one contribution, so fusing cannot reassociate float sums."""
+        code = """
+import numpy as np, jax
+from repro.snn import DistributedSNN, LIFParams, BlockSynapses
+from repro.compat import make_mesh
+from tests.test_snn_sparse import _clustered_w
+
+params = LIFParams(noise_sigma=0.0)
+for n_blocks, mesh_spec in [(8, ((8,), ("data",))), (32, ((8, 4), ("pod", "data")))]:
+    w = _clustered_w(64, n_blocks)
+    syn = BlockSynapses.from_dense(w, n_blocks)
+    mesh = make_mesh(*mesh_spec)
+    rasters = {}
+    for mode in ("fused", "per_round"):
+        d = DistributedSNN(mesh=mesh, params=params, exchange="ragged",
+                           i_ext=4.0, syn=syn, ragged_scatter=mode)
+        rasters[mode] = np.asarray(d.run(30, key=jax.random.PRNGKey(5)))
+    assert np.array_equal(rasters["fused"], rasters["per_round"]), mesh_spec
+print("OK")
+"""
+        assert "OK" in run_devices(code, n_devices=32)
+
     def test_sparse_from_expanded_model(self):
         """End-to-end: brain model → sparse expansion → sparse exchange
         equals the dense engine on the densified tiles."""
@@ -480,6 +507,13 @@ print("OK")
         mesh = make_mesh((1,), ("data",))
         with pytest.raises(ValueError, match="w_syn or syn"):
             DistributedSNN(mesh=mesh, params=LIFParams())
+        with pytest.raises(ValueError, match="bogus"):
+            DistributedSNN(
+                mesh=mesh,
+                params=LIFParams(),
+                w_syn=jnp.zeros((4, 4)),
+                ragged_scatter="bogus",
+            )
 
     def test_dense_w_needed_for_flat(self):
         from repro.compat import make_mesh
