@@ -1,0 +1,143 @@
+"""Incremental replan vs full rebuild (the delta-replan subsystem).
+
+Scenario: a 256-device / 16-group planted-community traffic graph (the
+regime Algorithm 2 targets) mutates while running — per edit round, a
+batch of symmetric volume edits lands inside a pair of groups (synapse
+growth/pruning localizes traffic change; cross edges included).  We
+compare
+
+* **incremental** — :func:`repro.core.replan.replan`: CSR delta merge,
+  bounded-region regroup sweeps, restricted bridge re-election;
+* **rebuild** — :func:`repro.core.routing.two_level_routing` from
+  scratch on the edited matrix (device graph + greedy grouping + full
+  LPT election).
+
+Gated (benchmarks/baseline.json):
+
+* ``replan/speedup_vs_rebuild`` — median wall-clock ratio across edit
+  rounds (tolerance pinned so the failure threshold is exactly 1×);
+* ``replan/quality_within_5pct`` — 1 when the *mean* signed drift of
+  both plan-quality metrics (total cross-group cut, peak level-2
+  bridge egress) is ≤ +5% vs the from-scratch tables (negative =
+  incremental better; single rounds are noisy because greedy-from-
+  scratch is itself unstable under small perturbations, so the gate
+  averages);
+* ``replan/delta_matrix_exact`` — 1 when every incrementally edited
+  :class:`TrafficMatrix` is exactly the from-scratch aggregate.
+
+The fault path (evacuate a dead device → replan with it barred from
+bridge duty) is timed and validated but not gated — its cost tracks the
+ordinary replan.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.graph import planted_partition_graph
+from repro.core.replan import evacuate_device, replan, symmetric_delta
+from repro.core.routing import (
+    group_pair_traffic,
+    level2_egress,
+    two_level_routing,
+)
+from repro.core.traffic import TrafficMatrix
+
+N_ROUNDS = 6
+N_EDITS = 16
+
+
+def _best_of(fn, reps=3):
+    best, out = np.inf, None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def _edit_batch(tb, eseed, n_edits):
+    """Symmetric volume edits localized to two groups of ``tb``."""
+    rng = np.random.default_rng(eseed)
+    g_a, g_b = rng.choice(tb.n_groups, 2, replace=False)
+    mem = np.concatenate([tb.members(int(g_a)), tb.members(int(g_b))])
+    s = rng.choice(mem, n_edits)
+    d = rng.choice(mem, n_edits)
+    keep = s != d
+    v = rng.uniform(0.5, 2.0, int(keep.sum()))
+    return symmetric_delta(s[keep], d[keep], v)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-leaning scale")
+    args = ap.parse_args(argv)
+
+    n, g = (512, 32) if args.full else (256, 16)
+    graph, _ = planted_partition_graph(
+        n, n_blocks=g, avg_degree=32, p_in_frac=0.9, seed=0
+    )
+    tm = TrafficMatrix.from_coo(
+        graph.rows(), graph.indices, graph.edge_traffic(), n
+    ).symmetrized(halve=True)
+    wg = np.ones(n)
+    tb = two_level_routing(tm, wg, g, seed=0)
+
+    speedups, cut_drift, peak_drift = [], [], []
+    exact = 1
+    for eseed in range(N_ROUNDS):
+        delta = _edit_batch(tb, eseed, N_EDITS)
+        res, t_inc = _best_of(lambda: replan(tb, wg, delta))
+        tm_new = tm.apply_delta(*delta)
+        tb_full, t_full = _best_of(
+            lambda: two_level_routing(tm_new, wg, g, seed=0)
+        )
+        speedups.append(t_full / t_inc)
+        tmi = res.table.device_traffic
+        tmf = tb_full.device_traffic
+        if not (
+            np.array_equal(tmi.indptr, tmf.indptr)
+            and np.array_equal(tmi.indices, tmf.indices)
+            and np.allclose(tmi.data, tmf.data, rtol=1e-12, atol=0)
+        ):
+            exact = 0
+        cut_i = group_pair_traffic(res.table).sum()
+        cut_f = group_pair_traffic(tb_full).sum()
+        peak_i = level2_egress(res.table).max()
+        peak_f = level2_egress(tb_full).max()
+        cut_drift.append((cut_i - cut_f) / cut_f * 100.0)
+        peak_drift.append((peak_i - peak_f) / peak_f * 100.0)
+
+    cut_mean = float(np.mean(cut_drift))
+    peak_mean = float(np.mean(peak_drift))
+    emit("replan/speedup_vs_rebuild", round(float(np.median(speedups)), 2), "x")
+    emit("replan/cut_drift_pct_mean", round(cut_mean, 2), "pct_vs_rebuild")
+    emit("replan/peak_egress_drift_pct_mean", round(peak_mean, 2), "pct_vs_rebuild")
+    emit(
+        "replan/quality_within_5pct",
+        int(cut_mean <= 5.0 and peak_mean <= 5.0),
+        "mean_drift_leq_5pct",
+    )
+    emit("replan/delta_matrix_exact", exact, "csr_equals_from_scratch")
+
+    # fault path: kill a bridge device, evacuate, replan around it
+    dead = int(tb.bridge[tb.bridge >= 0].ravel()[0])
+    t0 = time.perf_counter()
+    delta, wg2, _host = evacuate_device(tb, wg, dead)
+    res = replan(tb, wg2, delta, dead=[dead])
+    t_fault = time.perf_counter() - t0
+    tmd = res.table.device_traffic
+    ok = (
+        not np.any(tmd.rows() == dead)
+        and not np.any(tmd.indices == dead)
+        and not np.any(res.table.bridge == dead)
+    )
+    emit("replan/fault_replan_ms", round(t_fault * 1e3, 2), "evacuate+replan")
+    emit("replan/fault_dead_isolated", int(ok), "no_traffic_no_bridge_duty")
+
+
+if __name__ == "__main__":
+    main()

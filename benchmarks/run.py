@@ -48,6 +48,7 @@ def main(argv=None):
         hierarchical_a2a,
         kernel_bench,
         netsim_latency,
+        replan_bench,
         roofline_report,
         snn_throughput,
     )
@@ -68,6 +69,8 @@ def main(argv=None):
         # CI runs the reduced scope (32-device scenarios); --full adds
         # the Algorithm-2 forwarding replay at device scale
         ("netsim", netsim_latency.main, [] if args.full else ["--reduced"]),
+        # delta-replan vs full rebuild: speedup + plan-quality drift gates
+        ("replan", replan_bench.main, ["--full"] if args.full else []),
         ("roofline", roofline_report.main, []),
     ]
 

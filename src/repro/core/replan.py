@@ -1,0 +1,321 @@
+"""Incremental replan under a changing traffic graph (delta-replan).
+
+The paper's pipeline (partition → two-level route → exchange plan)
+assumes a static connectome, but a running brain simulation mutates its
+device-level traffic: synapse growth/pruning shifts volumes, structural
+plasticity rewires pairs, and a device failure is a forced repartition.
+Rebuilding the global structures from scratch on every change costs a
+full Algorithm-1 + Algorithm-2 solve; this module confines the work to
+the neighborhood the change actually touched:
+
+1. **Delta edit** — :meth:`repro.core.traffic.TrafficMatrix.apply_delta`
+   merges COO edit triplets into the stored CSR without re-aggregating
+   the neuron graph.
+2. **Bounded-region regroup** — only the groups containing a delta
+   endpoint (or a dead device) re-run the partition refinement sweeps
+   (:func:`repro.core.partition.refine_sweep_csr_seq` +
+   :func:`~repro.core.partition.swap_sweep_csr_seq`) on the induced
+   device subgraph.  Moves confined to that region optimize the *exact*
+   global cut: an edge from a region device to an outside device keeps
+   both endpoints' group relationship fixed under within-region moves,
+   because the outside group is never a move target.
+3. **Restricted bridge re-election** — only source groups whose
+   membership or outgoing pair-traffic row changed (plus groups holding
+   a dead device) re-run the LPT in
+   :func:`repro.core.routing.select_bridges`; every other group's bridge
+   row and share entries carry over verbatim, which is sound because a
+   group's election depends only on its own members and outgoing flows.
+
+Fault tolerance rides the same path: :func:`evacuate_device` turns a
+dead device into a delta (all its flows re-keyed onto a surviving host
+in its group), so the supervisor's failure handler is
+``evacuate → replan → plan swap`` (see
+:class:`repro.snn.distributed.PlanBuffer` and
+:class:`repro.train.fault_tolerance.Supervisor`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import partition as part_mod
+from repro.core.routing import RoutingTable, select_bridges
+from repro.core.traffic import TrafficMatrix
+
+__all__ = [
+    "ReplanResult",
+    "symmetric_delta",
+    "local_regroup",
+    "replan",
+    "evacuate_device",
+]
+
+
+def symmetric_delta(
+    src: np.ndarray, dst: np.ndarray, vals: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Mirror edit triplets so a symmetric matrix stays symmetric.
+
+    The routing pipeline stores both directions of every flow
+    (:meth:`TrafficMatrix.symmetrized`); an edit expressed once per pair
+    must land on both — this helper appends the transposed triplets.
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    vals = np.asarray(vals, dtype=np.float64)
+    return (
+        np.concatenate([src, dst]),
+        np.concatenate([dst, src]),
+        np.concatenate([vals, vals]),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanResult:
+    """Outcome of an incremental :func:`replan`.
+
+    Attributes:
+      table: the updated, validated :class:`RoutingTable`.
+      wg: per-device weights after evacuation edits (unchanged copy of
+          the input when ``dead`` was empty).
+      touched_groups: groups whose devices were allowed to move.
+      reelected_groups: source groups whose bridge rows were re-run.
+      moved_devices: regroup moves applied inside the region.
+    """
+
+    table: RoutingTable
+    wg: np.ndarray
+    touched_groups: np.ndarray
+    reelected_groups: np.ndarray
+    moved_devices: int
+
+
+def local_regroup(
+    tm: TrafficMatrix,
+    wg: np.ndarray,
+    group_of: np.ndarray,
+    region_groups: np.ndarray,
+    n_groups: int,
+    *,
+    balance_slack: float = 0.05,
+    sweeps: int = 2,
+) -> tuple[np.ndarray, int]:
+    """Refine the grouping inside ``region_groups`` only.
+
+    Extracts the induced device subgraph of the region, relabels its
+    groups to local part ids, and runs the exact sequential sweeps with
+    the *global* balance cap, so region parts stay exchangeable with the
+    untouched remainder.  Returns ``(group_of_new, moves)``; falls back
+    to the input assignment if a sweep would empty a group (bridges need
+    every group inhabited).
+    """
+    group_of = np.asarray(group_of, dtype=np.int64).copy()
+    region_groups = np.unique(np.asarray(region_groups, dtype=np.int64))
+    if region_groups.size < 2:
+        return group_of, 0
+    in_region = np.isin(group_of, region_groups)
+    dev_ids = np.flatnonzero(in_region)
+    local_id = np.full(group_of.shape[0], -1, dtype=np.int64)
+    local_id[dev_ids] = np.arange(dev_ids.size)
+    rows, cols, vals = tm.rows(), tm.indices, tm.data
+    m = in_region[rows] & in_region[cols]
+    src_l, dst_l, et_l = local_id[rows[m]], local_id[cols[m]], vals[m]
+    # tm's sorted CSR order survives masking + the monotone relabel, so
+    # the sweeps' sorted-rows requirement holds
+    counts = np.bincount(src_l, minlength=dev_ids.size)
+    indptr = np.zeros(dev_ids.size + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    assign_l = np.searchsorted(region_groups, group_of[dev_ids])
+    wg = np.asarray(wg, dtype=np.float64)
+    w_l = wg[dev_ids]
+    k = region_groups.size
+    cap = wg.sum() / n_groups * (1.0 + balance_slack)
+    moves = 0
+    for _ in range(max(1, sweeps)):
+        mv = part_mod.refine_sweep_csr_seq(indptr, dst_l, et_l, w_l, assign_l, k, cap)
+        mv += part_mod.swap_sweep_csr_seq(indptr, dst_l, et_l, w_l, assign_l, k, cap)
+        moves += mv
+        if mv == 0:
+            break
+    if np.bincount(assign_l, minlength=k).min() == 0:
+        return np.asarray(group_of, dtype=np.int64), 0
+    group_of[dev_ids] = region_groups[assign_l]
+    return group_of, moves
+
+
+def _pair_traffic(tm: TrafficMatrix, group_of: np.ndarray, g: int) -> np.ndarray:
+    """``[G, G]`` aggregated pair traffic, zero diagonal.
+
+    Unchanged pairs aggregate the same stored entries in the same scan
+    order as before an edit, so their sums are bit-identical — exact
+    ``!=`` comparison is the change detector, no tolerance needed.
+    """
+    out = np.bincount(
+        group_of[tm.rows()] * g + group_of[tm.indices],
+        weights=tm.data,
+        minlength=g * g,
+    ).reshape(g, g)
+    np.fill_diagonal(out, 0.0)
+    return out
+
+
+def replan(
+    tb: RoutingTable,
+    wg: np.ndarray,
+    delta: tuple[np.ndarray, np.ndarray, np.ndarray],
+    *,
+    dead: np.ndarray | None = None,
+    balance_slack: float = 0.05,
+    sweeps: int = 2,
+) -> ReplanResult:
+    """Incrementally update a two-level routing table for a traffic delta.
+
+    Args:
+      tb: the current grouped table (sparse path — its
+        ``device_traffic`` must be a :class:`TrafficMatrix`).
+      wg: ``float64[N]`` per-device weights the grouping balances.
+      delta: COO edit triplets ``(src, dst, dvals)`` — use
+        :func:`symmetric_delta` to keep the stored matrix symmetric, or
+        the output of :func:`evacuate_device` for a failure.
+      dead: optional device ids barred from bridge duty (failed
+        hardware); their groups always re-elect.
+
+    Returns:
+      :class:`ReplanResult` with a validated table equivalent to what a
+      from-scratch rebuild would produce on the edited matrix, at the
+      cost of touching only the affected neighborhood.
+    """
+    if not isinstance(tb.device_traffic, TrafficMatrix):
+        raise ValueError("replan needs the sparse TrafficMatrix path")
+    if tb.bridge.size == 0:
+        raise ValueError("replan needs a grouped two-level table (not p2p)")
+    src, dst, dvals = delta
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    dvals = np.asarray(dvals, dtype=np.float64)
+    tm_old: TrafficMatrix = tb.device_traffic
+    tm_new = tm_old.apply_delta(src, dst, dvals)
+    n, g = tb.n_devices, tb.n_groups
+    wg = np.asarray(wg, dtype=np.float64)
+    dead_idx = (
+        np.unique(np.asarray(dead, dtype=np.int64).ravel())
+        if dead is not None
+        else np.empty(0, dtype=np.int64)
+    )
+    dead_mask = np.zeros(n, dtype=bool)
+    dead_mask[dead_idx] = True
+
+    # 1. bounded-region regroup: only groups holding a delta endpoint or
+    # a dead device may move devices
+    hot = dvals != 0
+    touched_dev = np.unique(np.concatenate([src[hot], dst[hot], dead_idx]))
+    region = (
+        np.unique(tb.group_of[touched_dev])
+        if touched_dev.size
+        else np.empty(0, dtype=np.int64)
+    )
+    group_of_new, moves = local_regroup(
+        tm_new,
+        wg,
+        tb.group_of,
+        region,
+        g,
+        balance_slack=balance_slack,
+        sweeps=sweeps,
+    )
+
+    # 2. restricted re-election: groups whose outgoing pair-traffic row
+    # changed, whose membership changed, or which hold a dead device
+    gp_old = _pair_traffic(tm_old, tb.group_of, g)
+    gp_new = _pair_traffic(tm_new, group_of_new, g)
+    rows_changed = np.flatnonzero(np.any(gp_new != gp_old, axis=1))
+    ch = np.flatnonzero(group_of_new != tb.group_of)
+    mem_changed = np.unique(
+        np.concatenate([tb.group_of[ch], group_of_new[ch]])
+    )
+    only = np.unique(
+        np.concatenate(
+            [rows_changed, mem_changed, group_of_new[dead_idx]]
+        ).astype(np.int64)
+    )
+    bridge, share_coo = select_bridges(
+        tm_new,
+        group_of_new,
+        g,
+        only_groups=only,
+        base=(tb.bridge, tb.share_coo),
+        exclude=dead_mask if dead_idx.size else None,
+    )
+    tb_new = RoutingTable(
+        group_of=group_of_new,
+        n_groups=g,
+        bridge=bridge,
+        device_traffic=tm_new,
+        method=tb.method,
+        share_coo=share_coo,
+    )
+    tb_new.validate()
+    return ReplanResult(
+        table=tb_new,
+        wg=wg.copy(),
+        touched_groups=region,
+        reelected_groups=only,
+        moved_devices=moves,
+    )
+
+
+def evacuate_device(
+    tb: RoutingTable,
+    wg: np.ndarray,
+    dead: int,
+    *,
+    host: int | None = None,
+) -> tuple[tuple[np.ndarray, np.ndarray, np.ndarray], np.ndarray, int]:
+    """Turn a dead device into a forced traffic delta.
+
+    Every stored flow touching ``dead`` is re-keyed onto ``host`` (by
+    default the least-loaded surviving member of the dead device's
+    group) and the dead device's neuron weight moves with it; flows
+    between ``dead`` and ``host`` become host-internal and vanish (the
+    delta's self-loops are dropped by ``apply_delta``).
+
+    Returns ``(delta, wg_new, host)`` — feed the delta plus
+    ``dead=[dead]`` to :func:`replan`.
+    """
+    if not isinstance(tb.device_traffic, TrafficMatrix):
+        raise ValueError("evacuate_device needs the sparse TrafficMatrix path")
+    tm: TrafficMatrix = tb.device_traffic
+    wg = np.asarray(wg, dtype=np.float64)
+    dead = int(dead)
+    if host is None:
+        members = tb.members(int(tb.group_of[dead]))
+        members = members[members != dead]
+        if members.size == 0:
+            raise ValueError(
+                f"group {int(tb.group_of[dead])} has no surviving member to "
+                f"host device {dead}'s load"
+            )
+        host = int(members[np.argmin(wg[members])])
+    host = int(host)
+    if host == dead:
+        raise ValueError("host must differ from the dead device")
+    rows, cols, vals = tm.rows(), tm.indices, tm.data
+    out_m = rows == dead
+    in_m = cols == dead
+    n_out, n_in = int(out_m.sum()), int(in_m.sum())
+    # remove each entry exactly (negating its stored volume), re-add it
+    # keyed to the host
+    d_src = np.concatenate(
+        [rows[out_m], np.full(n_out, host, np.int64), rows[in_m], rows[in_m]]
+    )
+    d_dst = np.concatenate(
+        [cols[out_m], cols[out_m], cols[in_m], np.full(n_in, host, np.int64)]
+    )
+    d_val = np.concatenate(
+        [-vals[out_m], vals[out_m], -vals[in_m], vals[in_m]]
+    )
+    wg_new = wg.copy()
+    wg_new[host] += wg_new[dead]
+    wg_new[dead] = 0.0
+    return (d_src, d_dst, d_val), wg_new, host

@@ -55,6 +55,7 @@ __all__ = [
     "needed_sources",
     "payload_widths",
     "pool_block_mask",
+    "select_bridges",
 ]
 
 
@@ -355,7 +356,7 @@ def _route(
 ) -> RoutingTable:
     res = _GROUPERS[grouping](dg, n_groups, itermax, balance_slack, seed)
     group_of = res.assign
-    bridge, share_coo = _select_bridges(tm, group_of, n_groups)
+    bridge, share_coo = select_bridges(tm, group_of, n_groups)
     tb = RoutingTable(
         group_of=group_of,
         n_groups=n_groups,
@@ -368,8 +369,14 @@ def _route(
     return tb
 
 
-def _select_bridges(
-    tm: TrafficMatrix, group_of: np.ndarray, n_groups: int
+def select_bridges(
+    tm: TrafficMatrix,
+    group_of: np.ndarray,
+    n_groups: int,
+    *,
+    only_groups: np.ndarray | None = None,
+    base: tuple[np.ndarray, tuple[np.ndarray, np.ndarray, np.ndarray]] | None = None,
+    exclude: np.ndarray | None = None,
 ) -> tuple[np.ndarray, tuple[np.ndarray, np.ndarray, np.ndarray]]:
     """Assign bridge responsibilities for every ordered group pair.
 
@@ -382,6 +389,15 @@ def _select_bridges(
     All pairwise aggregates come from O(nnz) scatters; the only remaining
     loop is the inherently sequential per-group LPT over its *nonzero*
     destination groups.  Returns ``(primary_bridge [G, G], share_coo)``.
+
+    Restricted re-election (the delta-replan path,
+    :mod:`repro.core.replan`): with ``only_groups`` set, only those
+    source groups rerun their LPT; every other group's bridge row and
+    share entries are carried over verbatim from ``base`` (a prior
+    ``(bridge, share_coo)`` pair), which is sound because a group's
+    election depends only on its own membership and its own outgoing
+    flows.  ``exclude`` (``bool[N]``) bars devices — e.g. dead ones —
+    from bridge duty in the re-elected groups.
     """
     n = tm.n_devices
     g = n_groups
@@ -399,12 +415,36 @@ def _select_bridges(
     member_order = np.argsort(group_of, kind="stable")
     member_start = np.searchsorted(group_of[member_order], np.arange(g + 1))
 
-    bridge = np.full((g, g), -1, dtype=np.int64)
-    sh_dev: list[np.ndarray] = []
-    sh_grp: list[np.ndarray] = []
-    sh_frac: list[np.ndarray] = []
-    for gs in range(g):
+    if only_groups is None:
+        elect = range(g)
+        bridge = np.full((g, g), -1, dtype=np.int64)
+        sh_dev: list[np.ndarray] = []
+        sh_grp: list[np.ndarray] = []
+        sh_frac: list[np.ndarray] = []
+    else:
+        if base is None:
+            raise ValueError("only_groups needs base=(bridge, share_coo)")
+        only_groups = np.unique(np.asarray(only_groups, dtype=np.int64))
+        if only_groups.size and (
+            only_groups.min() < 0 or only_groups.max() >= g
+        ):
+            raise ValueError("only_groups out of range")
+        elect = only_groups.tolist()
+        base_bridge, base_share = base
+        bridge = np.array(base_bridge, dtype=np.int64, copy=True)
+        bridge[only_groups] = -1
+        # keep share entries of groups NOT being re-elected; a carried
+        # device's source group is unchanged (membership changes force
+        # re-election of both old and new group — replan guarantees it)
+        b_dev, b_grp, b_frac = base_share
+        keep = ~np.isin(group_of[b_dev], only_groups) if b_dev.size else np.zeros(0, bool)
+        sh_dev = [b_dev[keep]]
+        sh_grp = [b_grp[keep]]
+        sh_frac = [b_frac[keep]]
+    for gs in elect:
         members = member_order[member_start[gs] : member_start[gs + 1]]
+        if exclude is not None and members.size:
+            members = members[~np.asarray(exclude, dtype=bool)[members]]
         if members.size == 0:
             continue
         flows = grp_pair[gs].copy()
@@ -439,6 +479,10 @@ def _select_bridges(
             np.empty(0, np.float64),
         )
     return bridge, share_coo
+
+
+#: Back-compat alias (pre-replan name; tests import it).
+_select_bridges = select_bridges
 
 
 def needed_sources(tb: RoutingTable) -> np.ndarray:

@@ -36,6 +36,37 @@ def _ranges(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
     return out
 
 
+def _merge_by_key(key: np.ndarray, vals: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Sort COO entries by flat key and sum equal-key runs.
+
+    Stable sort keeps equal-key contributions in input order, so merged
+    sums are reproducible (run boundaries + ``reduceat`` — cheaper than
+    ``np.unique``, which would sort again)."""
+    order = np.argsort(key, kind="stable")
+    key, vals = key[order], vals[order]
+    if not key.size:
+        return key, vals
+    first = np.empty(key.shape[0], dtype=bool)
+    first[0] = True
+    np.not_equal(key[1:], key[:-1], out=first[1:])
+    start = np.nonzero(first)[0]
+    return key[start], np.add.reduceat(vals, start)
+
+
+def _csr_from_sorted_keys(
+    uniq: np.ndarray, merged: np.ndarray, n_devices: int
+) -> "TrafficMatrix":
+    """Assemble a validated CSR from sorted unique flat keys + values."""
+    rows = uniq // n_devices
+    cols = uniq % n_devices
+    counts = np.bincount(rows, minlength=n_devices)
+    indptr = np.zeros(n_devices + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    tm = TrafficMatrix(indptr=indptr, indices=cols, data=merged)
+    tm.validate()
+    return tm
+
+
 @dataclasses.dataclass(frozen=True)
 class TrafficMatrix:
     """CSR matrix of aggregated device-to-device traffic.
@@ -148,13 +179,65 @@ class TrafficMatrix:
             raise ValueError("indptr must start at 0 and end at nnz")
         if np.any(np.diff(self.indptr) < 0):
             raise ValueError("indptr must be nondecreasing")
+        if self.data.shape != self.indices.shape:
+            raise ValueError("indices and data must have equal length")
         if self.nnz:
             if self.indices.min() < 0 or self.indices.max() >= n:
                 raise ValueError("column indices out of range")
-            if np.any(self.rows() == self.indices):
+            rows = self.rows()
+            if np.any(rows == self.indices):
                 raise ValueError("diagonal entries are not allowed")
+            # sorted-columns / merged-duplicates: within a row, columns
+            # must be strictly increasing (equality = unmerged duplicate,
+            # decrease = unsorted) — searchsorted/reduceat consumers
+            # silently misread anything else
+            same_row = rows[1:] == rows[:-1]
+            if np.any(same_row & (np.diff(self.indices) <= 0)):
+                raise ValueError(
+                    "column indices must be strictly increasing within "
+                    "each row (sorted, duplicates merged)"
+                )
         if np.any(self.data <= 0):
             raise ValueError("stored traffic must be positive")
+
+    def apply_delta(
+        self,
+        src: np.ndarray,
+        dst: np.ndarray,
+        dvals: np.ndarray,
+    ) -> "TrafficMatrix":
+        """Incrementally edit the matrix; returns a new validated CSR.
+
+        ``dvals[k]`` is *added* to entry ``(src[k], dst[k])`` — positive
+        to grow or create a flow, negative to shrink or remove one.
+        Duplicate delta triplets sum; self-loops are dropped (a device
+        never stores traffic to itself); entries whose merged volume
+        lands at or below zero are removed, matching
+        :meth:`from_coo` dropping non-positive aggregates — so editing
+        via deltas and rebuilding from the edited COO agree exactly.
+
+        Cost is O((nnz + |delta|) log |delta|)-ish: one merge pass over
+        the stored entries plus a sort of the delta — no re-aggregation
+        of the neuron graph, which is the point (structural plasticity
+        and fault evacuation edit a handful of device pairs per event).
+        """
+        n = self.n_devices
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        dvals = np.asarray(dvals, dtype=np.float64)
+        if not (src.shape == dst.shape == dvals.shape and src.ndim == 1):
+            raise ValueError("delta triplets must be equal-length 1-D arrays")
+        if src.size and (
+            min(src.min(), dst.min()) < 0 or max(src.max(), dst.max()) >= n
+        ):
+            raise ValueError("delta device indices out of range")
+        keep = src != dst
+        src, dst, dvals = src[keep], dst[keep], dvals[keep]
+        key = np.concatenate([self.rows() * n + self.indices, src * n + dst])
+        vals = np.concatenate([self.data, dvals])
+        uniq, merged = _merge_by_key(key, vals)
+        pos = merged > 0
+        return _csr_from_sorted_keys(uniq[pos], merged[pos], n)
 
     # -- constructors -------------------------------------------------------
 
@@ -173,28 +256,8 @@ class TrafficMatrix:
         vals = np.asarray(vals, dtype=np.float64)
         keep = (src != dst) & (vals > 0)
         src, dst, vals = src[keep], dst[keep], vals[keep]
-        key = src * n_devices + dst
-        order = np.argsort(key, kind="stable")
-        key, vals = key[order], vals[order]
-        if key.size:
-            # boundaries of equal-key runs (keys are sorted — cheaper than
-            # np.unique, which would sort again)
-            first = np.empty(key.shape[0], dtype=bool)
-            first[0] = True
-            np.not_equal(key[1:], key[:-1], out=first[1:])
-            start = np.nonzero(first)[0]
-            uniq = key[start]
-            merged = np.add.reduceat(vals, start)
-        else:
-            uniq, merged = key, vals
-        rows = uniq // n_devices
-        cols = uniq % n_devices
-        counts = np.bincount(rows, minlength=n_devices)
-        indptr = np.zeros(n_devices + 1, dtype=np.int64)
-        np.cumsum(counts, out=indptr[1:])
-        tm = cls(indptr=indptr, indices=cols, data=merged)
-        tm.validate()
-        return tm
+        uniq, merged = _merge_by_key(src * n_devices + dst, vals)
+        return _csr_from_sorted_keys(uniq, merged, n_devices)
 
     @classmethod
     def from_dense(cls, t: np.ndarray) -> "TrafficMatrix":

@@ -30,6 +30,7 @@ from repro.snn.ragged import (
 )
 from repro.snn.distributed import (
     DistributedSNN,
+    PlanBuffer,
     group_mesh_permutation,
     partition_permutation,
 )
@@ -56,6 +57,7 @@ __all__ = [
     "bridge_inner_from_table",
     "build_ragged_plan",
     "DistributedSNN",
+    "PlanBuffer",
     "group_mesh_permutation",
     "partition_permutation",
 ]

@@ -64,7 +64,12 @@ from repro.snn.neuron import (
     lif_step,
 )
 
-__all__ = ["DistributedSNN", "partition_permutation", "group_mesh_permutation"]
+__all__ = [
+    "DistributedSNN",
+    "PlanBuffer",
+    "partition_permutation",
+    "group_mesh_permutation",
+]
 
 
 def group_mesh_permutation(tb) -> tuple[np.ndarray, tuple[int, int]]:
@@ -150,6 +155,7 @@ class DistributedSNN:
     policy: KernelPolicy = KernelPolicy()
     bridge_inner: np.ndarray | None = None
     ragged_scatter: str = "fused"
+    plan: RaggedPlan | None = None
 
     def __post_init__(self):
         if self.params is None:
@@ -168,6 +174,14 @@ class DistributedSNN:
             raise ValueError(
                 f"syn has {self.syn.n_blocks} blocks for {self.n_devices} devices"
             )
+        if self.plan is not None:
+            if self.exchange != "ragged":
+                raise ValueError("plan= only applies to exchange='ragged'")
+            if self.plan.mesh_shape != self._mesh_groups():
+                raise ValueError(
+                    f"plan mesh {self.plan.mesh_shape} != engine mesh "
+                    f"{self._mesh_groups()}"
+                )
 
     @property
     def axis_names(self) -> tuple[str, ...]:
@@ -193,10 +207,60 @@ class DistributedSNN:
 
     def _ragged_plan(self) -> RaggedPlan:
         """The static ragged level-2 schedule this engine executes (or
-        would execute) with ``exchange='ragged'``."""
+        would execute) with ``exchange='ragged'`` — the explicit
+        ``plan`` field when set (the double-buffered swap path), else
+        planned fresh from the synapse tiles."""
+        if self.plan is not None:
+            return self.plan
         g, r = self._mesh_groups()
         return build_ragged_plan(
             self._block_synapses(), (g, r), bridge_inner=self.bridge_inner
+        )
+
+    def with_plan(
+        self, plan: RaggedPlan, *, syn: BlockSynapses | None = None
+    ) -> "DistributedSNN":
+        """New engine executing ``plan`` (and optionally edited synapse
+        tiles) — the flip half of the double-buffered plan swap.
+
+        When ``plan`` shares the active plan's :meth:`step_signature`,
+        the flipped engine reuses the already-compiled step (the
+        module-level :func:`_sparse_step` cache): only the index / tile
+        *values* change, and those are jit inputs.
+        """
+        return dataclasses.replace(
+            self, plan=plan, syn=self.syn if syn is None else syn
+        )
+
+    def step_signature(self) -> tuple:
+        """Static signature of the compiled sparse/ragged step.
+
+        Two engines with equal signatures (and equal mesh / params /
+        policy) share one compiled step — array contents (spike index
+        rows, synapse tiles) are jit inputs, so a plan swap that keeps
+        the signature flips between steps without a recompile stall.
+        For ``'ragged'`` the signature is the live rounds' (shift,
+        width, ppermute perm); for ``'sparse'`` the masked round pair
+        lists.
+        """
+        if self.exchange == "ragged":
+            plan = self._ragged_plan()
+            return (
+                "ragged",
+                tuple(
+                    (rnd.shift, rnd.width, rnd.perm)
+                    for rnd in plan.rounds
+                    if rnd.pairs
+                ),
+            )
+        syn = self._block_synapses()
+        g, r = self._mesh_groups()
+        gmask = pool_block_mask(
+            syn.mask(), np.arange(self.n_devices) // r, g
+        )
+        return (
+            "sparse",
+            tuple(tuple(pairs) for pairs in exchange_schedule(gmask)),
         )
 
     def exchange_stats(self) -> dict[str, int]:
@@ -275,176 +339,271 @@ class DistributedSNN:
         w = jax.device_put(self.w_syn, NamedSharding(self.mesh, col_spec))
         return jax.jit(_run)(v0, u0, keys, w)
 
+    def _step_key(self, n_steps: int) -> "_StepKey":
+        return _StepKey(
+            mesh=self.mesh,
+            params=self.params,
+            policy=self.policy,
+            i_ext=float(self.i_ext),
+            ragged_scatter=self.ragged_scatter,
+            n_steps=int(n_steps),
+            signature=self.step_signature(),
+        )
+
     def _run_sparse(self, n_steps: int, *, key: jax.Array) -> jax.Array:
         """Masked/ragged block exchange + block-CSR accumulation.
 
-        Level-1 (fast axes) gathers the group spike block as in
-        ``'two_level'``.  Level-2 depends on ``exchange``:
-
-        * ``'sparse'`` — only the ``ppermute`` rounds the group-pooled
-          block mask schedules run, every inner position shipping the
-          full ``R·B`` group block;
-        * ``'ragged'`` — each scheduled pair moves one packed
-          ``f32[K_r]`` payload (consumed columns only, padded to the
-          per-round max) bridge-to-bridge via a joint-axis ``ppermute``,
-          then a fast-axis ``psum`` re-broadcasts it inside the receiving
-          group and the payload is scattered back into its block slots
-          (pad lanes land in a trash slot).
-
-        Unneeded group blocks/columns never cross the slow axis — their
-        receive slots stay zero, and the block-CSR storage holds no
-        weight for them, so the raster is identical to the dense oracle.
-        All shapes and both schedules are static (derived from the
-        synapse tiles / routing table at trace time); the accumulation
-        runs through :func:`repro.kernels.spike_currents_blocks` so
-        ``policy`` flips einsum ↔ Pallas without touching the exchange.
+        The compiled step is built (and cached) by :func:`_sparse_step`
+        keyed on the engine's static signature; this method only
+        prepares the jit *inputs* — neuron state, padded synapse tiles,
+        and the per-round spike index rows.  Swapping to a plan with an
+        equal :meth:`step_signature` therefore reuses the compiled step.
         """
         syn = self._block_synapses()
         n_dev = self.n_devices
-        m = syn.n_neurons
-        b = syn.block_size
-        axes = self.axis_names
-        g, r = self._mesh_groups()
-        slow, inner = axes[0], axes[1:]
-        ragged = self.exchange == "ragged"
-        rb = r * b
         src_pad, blk_pad = syn.padded()  # [n_dev, K], [n_dev, K, B, B]
-
-        if ragged:
+        if self.exchange == "ragged":
             plan = self._ragged_plan()
-            live = [rnd for rnd in plan.rounds if rnd.pairs]
             # per-device (send, recv) index rows, one [n_dev, 2, K_r]
             # array per live round (round widths differ — static shapes
             # per ppermute, not across them)
             idx_arrays = tuple(
                 jnp.asarray(np.stack([rnd.send_idx, rnd.recv_idx], axis=1))
-                for rnd in live
+                for rnd in plan.rounds
+                if rnd.pairs
             )
         else:
-            gmask = pool_block_mask(syn.mask(), np.arange(n_dev) // r, g)
-            rounds = exchange_schedule(gmask)
             idx_arrays = ()
-
-        step = lif_step if isinstance(self.params, LIFParams) else izhikevich_step
-        params = self.params
-        policy = self.policy
-        i_ext = jnp.float32(self.i_ext)
-        vec_spec = P(axes)
-        blk_spec = P(axes)  # tile arrays sharded over their leading dim
-
-        def gather_group(spikes_loc):
-            if r > 1:
-                return jax.lax.all_gather(spikes_loc, inner, axis=0, tiled=True)
-            return spikes_loc  # [R·B] group spike block
-
-        def gather_blocks(spikes_loc):
-            """[B] local spikes → [n_dev, B] global blocks (zeros where
-            the schedule skipped the transfer)."""
-            s_grp = gather_group(spikes_loc)
-            gid = jax.lax.axis_index(slow)
-            buf = jnp.zeros((g, rb), jnp.float32)
-            buf = buf.at[gid].set(s_grp)
-            for shift, pairs in enumerate(rounds, start=1):
-                if not pairs:
-                    continue
-                recv = jax.lax.ppermute(s_grp, slow, perm=pairs)
-                # whatever arrived in the shift-`shift` round came from
-                # group (gid - shift); untargeted receivers got zeros and
-                # write zeros into an otherwise-untouched slot
-                buf = buf.at[(gid - shift) % g].set(recv)
-            return buf.reshape(n_dev, b)
-
-        fused = self.ragged_scatter == "fused"
-
-        def gather_blocks_ragged(spikes_loc, idx_loc):
-            """Ragged level-2: bridge-only packed ppermute + fast-axis
-            broadcast + scatter into block slots (trash slot ``rb``).
-
-            The scatter runs in one of two modes: ``'per_round'`` lands
-            each round's payload with its own ``buf.at[...].add``;
-            ``'fused'`` collects every round's payload and flat buffer
-            indices and lands them all (plus the local group block) in a
-            single ``segment_sum`` — one scatter op per step.  Every
-            non-trash slot receives at most one contribution (rows are
-            disjoint per shift, columns unique within a round), so the
-            two modes are bit-identical.
-            """
-            s_grp = gather_group(spikes_loc)
-            gid = jax.lax.axis_index(slow)
-            parts = [s_grp]  # local block → own row, columns [0, rb)
-            flat_idx = [gid * (rb + 1) + jnp.arange(rb, dtype=jnp.int32)]
-            buf = None
-            if not fused:
-                buf = jnp.zeros((g, rb + 1), jnp.float32)
-                buf = buf.at[gid, :rb].set(s_grp)
-            for rnd, idx in zip(live, idx_loc):
-                send_idx = idx[0, 0]  # [K_r] columns of s_grp to pack
-                recv_idx = idx[0, 1]  # [K_r] slots (rb = trash)
-                payload = s_grp[send_idx]
-                recv = jax.lax.ppermute(payload, axes, perm=rnd.perm)
-                if r > 1:
-                    # only the receiving bridge got data; everyone else
-                    # holds zeros, so a psum is the intra-group broadcast
-                    recv = jax.lax.psum(recv, inner)
-                row = (gid - rnd.shift) % g
-                if fused:
-                    parts.append(recv)
-                    flat_idx.append(row * (rb + 1) + recv_idx)
-                else:
-                    buf = buf.at[row, recv_idx].add(recv)
-            if fused:
-                buf = jax.ops.segment_sum(
-                    jnp.concatenate(parts),
-                    jnp.concatenate(flat_idx),
-                    num_segments=g * (rb + 1),
-                ).reshape(g, rb + 1)
-            return buf[:, :rb].reshape(n_dev, b)
-
-        @functools.partial(
-            shard_map,
-            mesh=self.mesh,
-            in_specs=(vec_spec, vec_spec, P(axes), blk_spec, blk_spec, P(axes)),
-            out_specs=P(None, axes),
-            check_vma=False,
-        )
-        def _run(v0, u0, keys, src_ids, blocks, idx_loc):
-            state = NeuronState(v=v0, u=u0, key=keys[0])
-            src_ids_loc = src_ids[0]  # [K]
-            blocks_loc = blocks[0]  # [K, B, B]
-            n_loc = v0.shape[0]
-
-            def body(carry, _):
-                state, prev_loc = carry
-                if ragged:
-                    s_blocks = gather_blocks_ragged(prev_loc, idx_loc)
-                else:
-                    s_blocks = gather_blocks(prev_loc)
-                i_syn = (
-                    spike_currents_blocks(
-                        s_blocks, src_ids_loc, blocks_loc, policy=policy
-                    )
-                    + i_ext
-                )
-                state, spikes = step(state, i_syn, params)
-                return (state, spikes), spikes
-
-            (_, _), raster = jax.lax.scan(
-                body,
-                (state, jnp.zeros((n_loc,), jnp.float32)),
-                None,
-                length=n_steps,
-            )
-            return raster
-
+        fn = _sparse_step(self._step_key(n_steps))
         # one key per device over the full mesh (see the dense path)
         keys = jax.random.split(key, n_dev)
-        st0 = init_state(m, params, key)
+        st0 = init_state(syn.n_neurons, self.params, key)
+        vec_spec = P(self.axis_names)
         sharding = NamedSharding(self.mesh, vec_spec)
         v0 = jax.device_put(st0.v, sharding)
         u0 = jax.device_put(st0.u, sharding)
-        keys = jax.device_put(keys, NamedSharding(self.mesh, P(axes)))
-        blk_sharding = NamedSharding(self.mesh, blk_spec)
+        keys = jax.device_put(keys, sharding)
+        blk_sharding = NamedSharding(self.mesh, vec_spec)
         src_arr = jax.device_put(jnp.asarray(src_pad), blk_sharding)
         blk_arr = jax.device_put(jnp.asarray(blk_pad), blk_sharding)
         idx_put = tuple(jax.device_put(a, blk_sharding) for a in idx_arrays)
-        return jax.jit(_run)(v0, u0, keys, src_arr, blk_arr, idx_put)
+        return fn(v0, u0, keys, src_arr, blk_arr, idx_put)
+
+
+@dataclasses.dataclass(frozen=True)
+class _StepKey:
+    """Hashable static description of a compiled sparse/ragged step.
+
+    Everything a retrace could depend on *except* array shapes (jit
+    retraces on those by itself): the mesh, neuron/kernel constants, and
+    the exchange signature (:meth:`DistributedSNN.step_signature`).
+    """
+
+    mesh: Mesh
+    params: LIFParams | IzhikevichParams
+    policy: KernelPolicy
+    i_ext: float
+    ragged_scatter: str
+    n_steps: int
+    signature: tuple
+
+
+@functools.lru_cache(maxsize=32)
+def _sparse_step(key: _StepKey):
+    """Build the jitted sparse/ragged step for a static signature.
+
+    Level-1 (fast axes) gathers the group spike block as in
+    ``'two_level'``.  Level-2 depends on the signature kind:
+
+    * ``'sparse'`` — only the ``ppermute`` rounds the group-pooled
+      block mask schedules run, every inner position shipping the
+      full ``R·B`` group block;
+    * ``'ragged'`` — each scheduled pair moves one packed ``f32[K_r]``
+      payload (consumed columns only, padded to the per-round max)
+      bridge-to-bridge via a joint-axis ``ppermute``, then a fast-axis
+      ``psum`` re-broadcasts it inside the receiving group and the
+      payload is scattered back into its block slots (pad lanes land in
+      a trash slot).
+
+    Unneeded group blocks/columns never cross the slow axis — their
+    receive slots stay zero, and the block-CSR storage holds no weight
+    for them, so the raster is identical to the dense oracle.  All
+    shapes and both schedules are static; the accumulation runs through
+    :func:`repro.kernels.spike_currents_blocks` so ``policy`` flips
+    einsum ↔ Pallas without touching the exchange.
+
+    The ``lru_cache`` is what makes the double-buffered plan swap
+    stall-free: engines whose plans share a signature get the *same*
+    jitted callable, and the per-round index rows / synapse tiles are
+    inputs, so flipping plans never rebuilds or recompiles the step.
+    """
+    mesh = key.mesh
+    axes = tuple(mesh.axis_names)
+    slow, inner = axes[0], axes[1:]
+    g = mesh.shape[slow]
+    r = int(np.prod([mesh.shape[a] for a in inner])) if inner else 1
+    n_dev = g * r
+    kind, schedule = key.signature
+    ragged = kind == "ragged"
+    params = key.params
+    policy = key.policy
+    step = lif_step if isinstance(params, LIFParams) else izhikevich_step
+    i_ext = jnp.float32(key.i_ext)
+    fused = key.ragged_scatter == "fused"
+    n_steps = key.n_steps
+    vec_spec = P(axes)
+
+    def gather_group(spikes_loc):
+        if r > 1:
+            return jax.lax.all_gather(spikes_loc, inner, axis=0, tiled=True)
+        return spikes_loc  # [R·B] group spike block
+
+    def gather_blocks(spikes_loc):
+        """[B] local spikes → [n_dev, B] global blocks (zeros where
+        the schedule skipped the transfer)."""
+        s_grp = gather_group(spikes_loc)
+        rb = s_grp.shape[0]
+        gid = jax.lax.axis_index(slow)
+        buf = jnp.zeros((g, rb), jnp.float32)
+        buf = buf.at[gid].set(s_grp)
+        for shift, pairs in enumerate(schedule, start=1):
+            if not pairs:
+                continue
+            recv = jax.lax.ppermute(s_grp, slow, perm=pairs)
+            # whatever arrived in the shift-`shift` round came from
+            # group (gid - shift); untargeted receivers got zeros and
+            # write zeros into an otherwise-untouched slot
+            buf = buf.at[(gid - shift) % g].set(recv)
+        return buf.reshape(n_dev, rb // r)
+
+    def gather_blocks_ragged(spikes_loc, idx_loc):
+        """Ragged level-2: bridge-only packed ppermute + fast-axis
+        broadcast + scatter into block slots (trash slot ``rb``).
+
+        The scatter runs in one of two modes: ``'per_round'`` lands
+        each round's payload with its own ``buf.at[...].add``;
+        ``'fused'`` collects every round's payload and flat buffer
+        indices and lands them all (plus the local group block) in a
+        single ``segment_sum`` — one scatter op per step.  Every
+        non-trash slot receives at most one contribution (rows are
+        disjoint per shift, columns unique within a round), so the
+        two modes are bit-identical.
+        """
+        s_grp = gather_group(spikes_loc)
+        rb = s_grp.shape[0]
+        gid = jax.lax.axis_index(slow)
+        parts = [s_grp]  # local block → own row, columns [0, rb)
+        flat_idx = [gid * (rb + 1) + jnp.arange(rb, dtype=jnp.int32)]
+        buf = None
+        if not fused:
+            buf = jnp.zeros((g, rb + 1), jnp.float32)
+            buf = buf.at[gid, :rb].set(s_grp)
+        for (shift, _width, perm), idx in zip(schedule, idx_loc):
+            send_idx = idx[0, 0]  # [K_r] columns of s_grp to pack
+            recv_idx = idx[0, 1]  # [K_r] slots (rb = trash)
+            payload = s_grp[send_idx]
+            recv = jax.lax.ppermute(payload, axes, perm=perm)
+            if r > 1:
+                # only the receiving bridge got data; everyone else
+                # holds zeros, so a psum is the intra-group broadcast
+                recv = jax.lax.psum(recv, inner)
+            row = (gid - shift) % g
+            if fused:
+                parts.append(recv)
+                flat_idx.append(row * (rb + 1) + recv_idx)
+            else:
+                buf = buf.at[row, recv_idx].add(recv)
+        if fused:
+            buf = jax.ops.segment_sum(
+                jnp.concatenate(parts),
+                jnp.concatenate(flat_idx),
+                num_segments=g * (rb + 1),
+            ).reshape(g, rb + 1)
+        return buf[:, :rb].reshape(n_dev, rb // r)
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(vec_spec, vec_spec, P(axes), vec_spec, vec_spec, P(axes)),
+        out_specs=P(None, axes),
+        check_vma=False,
+    )
+    def _run(v0, u0, keys, src_ids, blocks, idx_loc):
+        state = NeuronState(v=v0, u=u0, key=keys[0])
+        src_ids_loc = src_ids[0]  # [K]
+        blocks_loc = blocks[0]  # [K, B, B]
+        n_loc = v0.shape[0]
+
+        def body(carry, _):
+            state, prev_loc = carry
+            if ragged:
+                s_blocks = gather_blocks_ragged(prev_loc, idx_loc)
+            else:
+                s_blocks = gather_blocks(prev_loc)
+            i_syn = (
+                spike_currents_blocks(
+                    s_blocks, src_ids_loc, blocks_loc, policy=policy
+                )
+                + i_ext
+            )
+            state, spikes = step(state, i_syn, params)
+            return (state, spikes), spikes
+
+        (_, _), raster = jax.lax.scan(
+            body,
+            (state, jnp.zeros((n_loc,), jnp.float32)),
+            None,
+            length=n_steps,
+        )
+        return raster
+
+    return jax.jit(_run)
+
+
+class PlanBuffer:
+    """Double-buffered :class:`RaggedPlan` holder for a running engine.
+
+    The replan pipeline (:mod:`repro.core.replan`) produces a fresh plan
+    off the hot path; :meth:`stage` parks it (with optionally edited
+    synapse tiles) next to the active engine, and :meth:`flip` swaps it
+    in between steps.  When the staged plan's static signature equals
+    the active one, the flipped engine reuses the compiled step via the
+    :func:`_sparse_step` cache — the swap is a pointer flip, not a
+    recompile stall; :meth:`stage` returns that reuse predicate so
+    callers can schedule an off-path warm-up compile when it is False.
+    """
+
+    def __init__(self, engine: DistributedSNN):
+        if engine.exchange != "ragged":
+            raise ValueError("PlanBuffer double-buffers ragged plans")
+        if engine.plan is None:
+            engine = engine.with_plan(engine._ragged_plan())
+        self._active = engine
+        self._staged: DistributedSNN | None = None
+
+    @property
+    def engine(self) -> DistributedSNN:
+        """The active engine — run steps on this."""
+        return self._active
+
+    @property
+    def staged(self) -> DistributedSNN | None:
+        return self._staged
+
+    def stage(
+        self, plan: RaggedPlan, *, syn: BlockSynapses | None = None
+    ) -> bool:
+        """Park ``plan`` (+ optional new tiles) in the back buffer.
+
+        Returns True when flipping will reuse the active compiled step
+        (equal static signatures — no recompile stall).
+        """
+        self._staged = self._active.with_plan(plan, syn=syn)
+        return self._staged.step_signature() == self._active.step_signature()
+
+    def flip(self) -> DistributedSNN:
+        """Swap the staged engine in and return it (the new active)."""
+        if self._staged is None:
+            raise RuntimeError("nothing staged — call stage() first")
+        self._active, self._staged = self._staged, None
+        return self._active

@@ -28,7 +28,23 @@ import numpy as np
 
 from repro.train import checkpoint as ckpt_mod
 
-__all__ = ["SupervisorConfig", "Supervisor", "StepResult"]
+__all__ = ["SupervisorConfig", "Supervisor", "StepResult", "DeviceFailure"]
+
+
+class DeviceFailure(RuntimeError):
+    """A step failure attributable to a specific dead device.
+
+    Raised by device health monitors (injected via ``failure_hook`` in
+    tests).  The supervisor reports ``device`` to its ``replan_hook``
+    before rolling back, so the communication layer can evacuate the
+    device and swap in an incrementally replanned exchange
+    (:mod:`repro.core.replan` → :class:`repro.snn.distributed.PlanBuffer`)
+    while training retries from the last checkpoint.
+    """
+
+    def __init__(self, device: int, message: str | None = None):
+        super().__init__(message or f"device {device} failed")
+        self.device = int(device)
 
 
 @dataclasses.dataclass
@@ -42,11 +58,17 @@ class SupervisorConfig:
 
 @dataclasses.dataclass
 class StepResult:
+    """One completed step.  ``wall_time`` is cumulative across every
+    attempt (rollback/retry cost included — historically only the final
+    attempt was timed, hiding retries from the straggler EWMA);
+    ``retries`` counts the failed attempts before success."""
+
     step: int
     loss: float
     wall_time: float
     restarted: bool = False
     straggler: bool = False
+    retries: int = 0
 
 
 class Supervisor:
@@ -61,6 +83,7 @@ class Supervisor:
         cfg: SupervisorConfig = SupervisorConfig(),
         *,
         failure_hook: Callable[[int], None] | None = None,
+        replan_hook: Callable[[int], None] | None = None,
     ):
         self.train_step = train_step
         self.params = params
@@ -68,6 +91,10 @@ class Supervisor:
         self.data_iter = data_iter
         self.cfg = cfg
         self.failure_hook = failure_hook
+        # called with the dead device id when a DeviceFailure is caught,
+        # before rollback — the communication layer's evacuate-and-replan
+        # entry point (see repro.core.replan)
+        self.replan_hook = replan_hook
         self.checkpointer = ckpt_mod.Checkpointer(cfg.ckpt_dir)
         self.step = 0
         self._ewma: float | None = None
@@ -99,10 +126,15 @@ class Supervisor:
         if self._last_ckpt_step is None:
             self._maybe_checkpoint()  # step-0 baseline for rollback
         while self.step < start_step + n_steps:
-            batch = self.data_iter(self.step)
             restarted = False
+            retries = 0
+            t_step = time.monotonic()  # cumulative: every attempt counts
             for attempt in range(self.cfg.max_retries_per_step + 1):
-                t0 = time.monotonic()
+                # (re-)fetch for the *current* step: a rollback resets
+                # self.step to the checkpoint, and replaying the
+                # pre-failure batch against restored params silently
+                # diverged from the failure-free trajectory
+                batch = self.data_iter(self.step)
                 try:
                     if self.failure_hook is not None:
                         self.failure_hook(self.step)
@@ -114,14 +146,17 @@ class Supervisor:
                         raise FloatingPointError(f"non-finite loss {loss}")
                     self.params, self.opt_state = params, opt_state
                     break
-                except Exception:
+                except Exception as err:
                     restarted = True
+                    retries += 1
                     if attempt >= self.cfg.max_retries_per_step:
                         raise
+                    if isinstance(err, DeviceFailure) and self.replan_hook:
+                        self.replan_hook(err.device)
                     if not self._rollback():
                         # no checkpoint yet: retry with fresh state
                         continue
-            dt = time.monotonic() - t0
+            dt = time.monotonic() - t_step
             straggler = self._ewma is not None and dt > self.cfg.deadline_factor * self._ewma
             self._ewma = (
                 dt
@@ -130,7 +165,14 @@ class Supervisor:
             )
             self.step += 1
             self.history.append(
-                StepResult(self.step, loss, dt, restarted=restarted, straggler=straggler)
+                StepResult(
+                    self.step,
+                    loss,
+                    dt,
+                    restarted=restarted,
+                    straggler=straggler,
+                    retries=retries,
+                )
             )
             self._maybe_checkpoint()
         self.checkpointer.wait()

@@ -1,0 +1,437 @@
+"""Delta-replan subsystem tests (incremental plan updates + fault path).
+
+Covers:
+
+* ``TrafficMatrix.apply_delta`` — property-checked against a dense
+  oracle and against ``from_coo`` on the edited COO stream; exact
+  removals; strict ``validate()`` negatives (unsorted / duplicated
+  columns, misaligned data).
+* ``replan`` — invariants over random edit sequences (table validates,
+  edited matrix exactly matches a from-scratch aggregate, level-2
+  conservation, untouched bridge rows carried over verbatim).
+* ``local_regroup`` — moves confined to the region.
+* ``select_bridges`` restricted re-election vs the full election.
+* ``evacuate_device`` — dense oracle, load handoff, dead isolation.
+* ``Supervisor`` + ``DeviceFailure`` → ``replan_hook`` integration.
+* Double-buffered ``PlanBuffer`` swap: bit-identical rasters vs a
+  from-scratch rebuild on a 1-D and an (8, 4) mesh, and compiled-step
+  reuse when the plan signature is preserved (subprocess, fake devices).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    RoutingTable,
+    TrafficMatrix,
+    evacuate_device,
+    level2_egress,
+    local_regroup,
+    planted_partition_graph,
+    replan,
+    select_bridges,
+    symmetric_delta,
+    two_level_routing,
+)
+from repro.core.routing import group_pair_traffic
+from tests._hypothesis_compat import given, settings, st
+from tests.conftest import run_devices
+
+N, G = 64, 8
+
+
+def _base_tm(n=N, g=G, seed=0) -> TrafficMatrix:
+    graph, _ = planted_partition_graph(
+        n, n_blocks=g, avg_degree=16, p_in_frac=0.85, seed=seed
+    )
+    return TrafficMatrix.from_coo(
+        graph.rows(), graph.indices, graph.edge_traffic(), n
+    ).symmetrized(halve=True)
+
+
+def _table(n=N, g=G):
+    tm = _base_tm(n, g)
+    wg = np.ones(n)
+    return two_level_routing(tm, wg, g, seed=0), tm, wg
+
+
+def _random_delta(tm: TrafficMatrix, seed: int, n_edits: int = 12):
+    """Mixed edit batch: new pairs, perturbations of stored entries,
+    and exact removals (negated stored volumes)."""
+    rng = np.random.default_rng(seed)
+    n = tm.n_devices
+    src = rng.integers(0, n, n_edits).astype(np.int64)
+    dst = rng.integers(0, n, n_edits).astype(np.int64)
+    vals = rng.uniform(0.1, 2.0, n_edits)
+    rows, cols, data = tm.rows(), tm.indices, tm.data
+    if rows.size:
+        # perturb two stored entries, exactly remove two others
+        pick = rng.choice(rows.size, min(4, rows.size), replace=False)
+        src = np.concatenate([src, rows[pick]])
+        dst = np.concatenate([dst, cols[pick]])
+        half = pick.size // 2
+        vals = np.concatenate(
+            [vals, rng.uniform(0.1, 1.0, pick.size - half), -data[pick[:half]]]
+        )
+    keep = src != dst
+    return src[keep], dst[keep], vals[keep]
+
+
+def _dense_oracle(tm: TrafficMatrix, src, dst, dvals) -> np.ndarray:
+    d = tm.to_dense()
+    np.add.at(d, (src, dst), dvals)
+    np.fill_diagonal(d, 0.0)
+    d[d <= 0] = 0.0
+    return d
+
+
+class TestApplyDelta:
+    @given(seed=st.integers(0, 9))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_dense_oracle(self, seed):
+        tm = _base_tm(seed=seed % 3)
+        src, dst, dvals = _random_delta(tm, seed)
+        got = tm.apply_delta(src, dst, dvals)
+        got.validate()
+        want = TrafficMatrix.from_dense(_dense_oracle(tm, src, dst, dvals))
+        np.testing.assert_array_equal(got.indptr, want.indptr)
+        np.testing.assert_array_equal(got.indices, want.indices)
+        np.testing.assert_allclose(got.data, want.data, rtol=1e-12, atol=0)
+
+    @given(seed=st.integers(0, 9))
+    @settings(max_examples=10, deadline=None)
+    def test_matches_from_coo_on_edited_stream(self, seed):
+        """apply_delta == re-aggregating the full edited COO stream —
+        the edit path never needs the neuron graph again."""
+        tm = _base_tm(seed=seed % 3)
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, tm.n_devices, 10).astype(np.int64)
+        dst = rng.integers(0, tm.n_devices, 10).astype(np.int64)
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        dvals = rng.uniform(0.1, 2.0, src.size)  # positive: no removals
+        got = tm.apply_delta(src, dst, dvals)
+        want = TrafficMatrix.from_coo(
+            np.concatenate([tm.rows(), src]),
+            np.concatenate([tm.indices, dst]),
+            np.concatenate([tm.data, dvals]),
+            tm.n_devices,
+        )
+        np.testing.assert_array_equal(got.indptr, want.indptr)
+        np.testing.assert_array_equal(got.indices, want.indices)
+        np.testing.assert_allclose(got.data, want.data, rtol=1e-12, atol=0)
+
+    def test_exact_removal_drops_entry(self):
+        tm = _base_tm()
+        r, c, v = tm.rows()[0], tm.indices[0], tm.data[0]
+        got = tm.apply_delta([r], [c], [-v])  # base + (−base) == 0 exactly
+        d = got.to_dense()
+        assert d[r, c] == 0.0
+        assert got.data.size == tm.data.size - 1
+
+    def test_self_loops_dropped(self):
+        tm = _base_tm()
+        got = tm.apply_delta([3, 1], [3, 2], [5.0, 1.0])
+        assert got.to_dense()[3, 3] == 0.0
+        assert got.to_dense()[1, 2] == tm.to_dense()[1, 2] + 1.0
+
+    def test_rejects_bad_args(self):
+        tm = _base_tm()
+        with pytest.raises(ValueError):
+            tm.apply_delta([0, 1], [2], [1.0, 1.0])  # length mismatch
+        with pytest.raises(ValueError):
+            tm.apply_delta([0], [tm.n_devices], [1.0])  # out of range
+        with pytest.raises(ValueError):
+            tm.apply_delta([-1], [0], [1.0])
+
+
+class TestValidateStrict:
+    def test_unsorted_columns_rejected(self):
+        tm = TrafficMatrix(
+            indptr=np.array([0, 2, 2, 2], dtype=np.int64),
+            indices=np.array([2, 1], dtype=np.int64),
+            data=np.array([1.0, 1.0]),
+        )
+        with pytest.raises(ValueError, match="strictly increasing"):
+            tm.validate()
+
+    def test_duplicate_columns_rejected(self):
+        tm = TrafficMatrix(
+            indptr=np.array([0, 2, 2, 2], dtype=np.int64),
+            indices=np.array([1, 1], dtype=np.int64),
+            data=np.array([1.0, 1.0]),
+        )
+        with pytest.raises(ValueError, match="strictly increasing"):
+            tm.validate()
+
+    def test_data_length_mismatch_rejected(self):
+        tm = TrafficMatrix(
+            indptr=np.array([0, 2, 2, 2], dtype=np.int64),
+            indices=np.array([1, 2], dtype=np.int64),
+            data=np.array([1.0]),
+        )
+        with pytest.raises(ValueError, match="equal length"):
+            tm.validate()
+
+    def test_sorted_matrix_passes(self):
+        _base_tm().validate()
+
+
+class TestSymmetricDelta:
+    def test_preserves_symmetry(self):
+        tm = _base_tm()
+        delta = symmetric_delta([0, 5], [9, 1], [2.0, 0.5])
+        d = tm.apply_delta(*delta).to_dense()
+        np.testing.assert_allclose(d, d.T, rtol=1e-12)
+
+
+class TestReplanInvariants:
+    @given(seed=st.integers(0, 4))
+    @settings(max_examples=5, deadline=None)
+    def test_random_edit_sequences(self, seed):
+        tb, tm, wg = _table()
+        rng = np.random.default_rng(seed)
+        for round_i in range(3):
+            mem = rng.choice(tb.n_devices, 12, replace=False)
+            s = rng.choice(mem, 10)
+            d = rng.choice(mem, 10)
+            keep = s != d
+            delta = symmetric_delta(
+                s[keep], d[keep], rng.uniform(0.2, 1.5, int(keep.sum()))
+            )
+            old_bridge = tb.bridge.copy()
+            res = replan(tb, wg, delta)
+            res.table.validate()
+            # the incrementally edited matrix is exactly the from-scratch
+            # aggregate of the edited stream
+            tm = tm.apply_delta(*delta)
+            got = res.table.device_traffic
+            np.testing.assert_array_equal(got.indptr, tm.indptr)
+            np.testing.assert_array_equal(got.indices, tm.indices)
+            np.testing.assert_allclose(got.data, tm.data, rtol=1e-12, atol=0)
+            # conservation: total level-2 bridge egress == total
+            # cross-group traffic
+            assert np.isclose(
+                level2_egress(res.table).sum(),
+                group_pair_traffic(res.table).sum(),
+                rtol=1e-9,
+            )
+            # untouched source groups carry their bridge rows verbatim
+            untouched = np.setdiff1d(np.arange(G), res.reelected_groups)
+            np.testing.assert_array_equal(
+                res.table.bridge[untouched], old_bridge[untouched]
+            )
+            tb = res.table
+
+    def test_empty_delta_is_identity(self):
+        tb, _, wg = _table()
+        e = np.empty(0, dtype=np.int64)
+        res = replan(tb, wg, (e, e, np.empty(0)))
+        assert res.moved_devices == 0 and res.reelected_groups.size == 0
+        np.testing.assert_array_equal(res.table.bridge, tb.bridge)
+        np.testing.assert_array_equal(res.table.group_of, tb.group_of)
+        got = res.table.device_traffic
+        np.testing.assert_array_equal(got.indices, tb.device_traffic.indices)
+        np.testing.assert_array_equal(got.data, tb.device_traffic.data)
+
+    def test_requires_grouped_sparse_table(self):
+        tb, tm, wg = _table()
+        p2p = RoutingTable(
+            group_of=np.arange(N, dtype=np.int64),
+            n_groups=N,
+            bridge=np.empty((0, 0), dtype=np.int64),
+            device_traffic=tm,
+            method="p2p",
+        )
+        e = np.empty(0, dtype=np.int64)
+        with pytest.raises(ValueError, match="grouped"):
+            replan(p2p, wg, (e, e, np.empty(0)))
+        dense = RoutingTable(
+            group_of=tb.group_of,
+            n_groups=G,
+            bridge=tb.bridge,
+            device_traffic=tm.to_dense(),
+            method=tb.method,
+            share_coo=tb.share_coo,
+        )
+        with pytest.raises(ValueError, match="sparse"):
+            replan(dense, wg, (e, e, np.empty(0)))
+
+
+class TestLocalRegroup:
+    def test_outside_region_never_moves(self):
+        tb, tm, wg = _table()
+        region = np.array([1, 4], dtype=np.int64)
+        new, _moves = local_regroup(tm, wg, tb.group_of, region, G)
+        outside = ~np.isin(tb.group_of, region)
+        np.testing.assert_array_equal(new[outside], tb.group_of[outside])
+        assert set(np.unique(new[~outside])) <= set(region.tolist())
+
+    def test_small_region_is_noop(self):
+        tb, tm, wg = _table()
+        new, moves = local_regroup(
+            tm, wg, tb.group_of, np.array([2], dtype=np.int64), G
+        )
+        assert moves == 0
+        np.testing.assert_array_equal(new, tb.group_of)
+
+
+class TestSelectBridgesRestricted:
+    def test_all_groups_equals_full_election(self):
+        tb, tm, _ = _table()
+        full_b, full_s = select_bridges(tm, tb.group_of, G)
+        res_b, res_s = select_bridges(
+            tm,
+            tb.group_of,
+            G,
+            only_groups=np.arange(G),
+            base=(tb.bridge, tb.share_coo),
+        )
+        np.testing.assert_array_equal(full_b, res_b)
+        want = sorted(zip(*[np.asarray(a).tolist() for a in full_s]))
+        got = sorted(zip(*[np.asarray(a).tolist() for a in res_s]))
+        assert want == got
+
+    def test_no_groups_returns_base(self):
+        tb, tm, _ = _table()
+        b, s = select_bridges(
+            tm,
+            tb.group_of,
+            G,
+            only_groups=np.empty(0, dtype=np.int64),
+            base=(tb.bridge, tb.share_coo),
+        )
+        np.testing.assert_array_equal(b, tb.bridge)
+        want = sorted(zip(*[np.asarray(a).tolist() for a in tb.share_coo]))
+        got = sorted(zip(*[np.asarray(a).tolist() for a in s]))
+        assert want == got
+
+
+class TestEvacuateDevice:
+    def test_matches_dense_handoff_oracle(self):
+        tb, tm, wg = _table()
+        dead = int(tb.bridge[tb.bridge >= 0].ravel()[0])
+        delta, wg2, host = evacuate_device(tb, wg, dead)
+        got = tm.apply_delta(*delta)
+        d = tm.to_dense()
+        d[host] += d[dead]
+        d[:, host] += d[:, dead]
+        d[dead], d[:, dead] = 0.0, 0.0
+        np.fill_diagonal(d, 0.0)
+        np.testing.assert_allclose(got.to_dense(), d, rtol=1e-12, atol=0)
+        assert not np.any(got.rows() == dead) and not np.any(got.indices == dead)
+        assert wg2[dead] == 0.0 and wg2[host] == wg[host] + wg[dead]
+        assert int(tb.group_of[host]) == int(tb.group_of[dead])
+
+    def test_fault_replan_isolates_dead(self):
+        tb, _tm, wg = _table()
+        dead = int(tb.bridge[tb.bridge >= 0].ravel()[0])
+        delta, wg2, _host = evacuate_device(tb, wg, dead)
+        res = replan(tb, wg2, delta, dead=[dead])
+        res.table.validate()
+        tmd = res.table.device_traffic
+        assert not np.any(tmd.rows() == dead) and not np.any(tmd.indices == dead)
+        assert not np.any(res.table.bridge == dead)
+
+    def test_rejects_host_equal_dead(self):
+        tb, _tm, wg = _table()
+        with pytest.raises(ValueError, match="differ"):
+            evacuate_device(tb, wg, 0, host=0)
+
+
+class TestSupervisorReplanIntegration:
+    def test_device_failure_triggers_replan_hook(self, tmp_path):
+        """A DeviceFailure mid-run drives evacuate → replan via the
+        supervisor's replan_hook, then training retries from the last
+        checkpoint and completes."""
+        import jax.numpy as jnp
+
+        from repro.train import DeviceFailure, Supervisor, SupervisorConfig
+
+        tb, _tm, wg = _table()
+        state = {"tb": tb, "wg": wg, "replanned": []}
+
+        def replan_hook(device):
+            delta, wg2, _host = evacuate_device(state["tb"], state["wg"], device)
+            res = replan(state["tb"], wg2, delta, dead=[device])
+            state["tb"], state["wg"] = res.table, res.wg
+            state["replanned"].append(device)
+
+        dead = int(tb.bridge[tb.bridge >= 0].ravel()[0])
+        fired = {"done": False}
+
+        def bomb(step_idx):
+            if step_idx == 3 and not fired["done"]:
+                fired["done"] = True
+                raise DeviceFailure(dead)
+
+        def train_step(params, opt, batch):
+            w = params["w"]
+            loss = jnp.sum(w * batch)
+            return loss, {"w": w - 0.1 * batch}, opt, None
+
+        data = lambda s: jnp.full(4, float(s + 1))
+        sup = Supervisor(
+            train_step,
+            {"w": jnp.zeros(4)},
+            {},
+            data,
+            SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=2),
+            failure_hook=bomb,
+            replan_hook=replan_hook,
+        )
+        hist = sup.run(6)
+        assert state["replanned"] == [dead]
+        assert not np.any(state["tb"].bridge == dead)
+        assert any(h.restarted and h.retries == 1 for h in hist)
+        assert hist[-1].step == 6
+
+
+class TestPlanSwapExecution:
+    def test_double_buffered_swap_bit_identical(self):
+        """Staged+flipped plans replay bit-identically to a from-scratch
+        engine on a 1-D and an (8, 4) mesh, and a signature-preserving
+        swap reuses the compiled step (cache hit, no new miss)."""
+        code = """
+import numpy as np, jax
+import repro.snn.distributed as dist_mod
+from repro.snn import DistributedSNN, LIFParams, BlockSynapses, PlanBuffer
+from repro.snn.ragged import build_ragged_plan
+from repro.compat import make_mesh
+from tests.test_snn_sparse import _clustered_w
+
+params = LIFParams(noise_sigma=0.0)
+for n_blocks, mesh_spec in [(8, ((8,), ("data",))), (32, ((8, 4), ("pod", "data")))]:
+    w = _clustered_w(64, n_blocks)
+    syn = BlockSynapses.from_dense(w, n_blocks)
+    mesh = make_mesh(*mesh_spec)
+    eng = DistributedSNN(mesh=mesh, params=params, exchange="ragged",
+                         i_ext=4.0, syn=syn)
+    buf = PlanBuffer(eng)
+    r1 = np.asarray(buf.engine.run(20, key=jax.random.PRNGKey(7)))
+
+    # same-signature restage: pointer flip, compiled step reused
+    info0 = dist_mod._sparse_step.cache_info()
+    assert buf.stage(buf.engine._ragged_plan())
+    r1b = np.asarray(buf.flip().run(20, key=jax.random.PRNGKey(7)))
+    info1 = dist_mod._sparse_step.cache_info()
+    assert np.array_equal(r1, r1b), mesh_spec
+    assert info1.misses == info0.misses and info1.hits > info0.hits, mesh_spec
+
+    # edited weights -> new plan; swap == from-scratch rebuild
+    b = w.shape[0] // n_blocks
+    w2 = w.copy()
+    w2[:b, -b:] = 0.3
+    w2[-b:, b:2*b] = 0.0
+    syn2 = BlockSynapses.from_dense(w2, n_blocks)
+    plan2 = build_ragged_plan(syn2, buf.engine.plan.mesh_shape)
+    buf.stage(plan2, syn=syn2)
+    r_swap = np.asarray(buf.flip().run(20, key=jax.random.PRNGKey(7)))
+    fresh = DistributedSNN(mesh=mesh, params=params, exchange="ragged",
+                           i_ext=4.0, syn=syn2)
+    r_fresh = np.asarray(fresh.run(20, key=jax.random.PRNGKey(7)))
+    assert np.array_equal(r_swap, r_fresh), mesh_spec
+print("OK")
+"""
+        assert "OK" in run_devices(code, n_devices=32)

@@ -170,6 +170,85 @@ class TestFaultTolerance:
         assert any(h.restarted for h in hist)
         assert all(np.isfinite(h.loss) for h in hist)
 
+    def test_rollback_replays_restored_step_batch(self, tmp_path):
+        """Regression: after a rollback the supervisor must re-fetch the
+        batch for the *restored* step.  The old loop fetched once per
+        step before the attempt loop, so a retry applied the pre-failure
+        batch to checkpoint-restored params — params silently diverged
+        from the failure-free trajectory.  With deterministic data and a
+        deterministic step, an injected failure must leave the final
+        params bit-equal to a failure-free run."""
+
+        def train_step(params, opt, batch):
+            w = params["w"]
+            loss = jnp.sum((w - batch) ** 2)
+            return loss, {"w": w - 0.25 * (w - batch)}, opt, None
+
+        data = lambda s: jnp.arange(4, dtype=jnp.float32) * (s + 1)
+        init = {"w": jnp.zeros(4)}
+
+        sup_ok = Supervisor(
+            train_step,
+            init,
+            {},
+            data,
+            SupervisorConfig(ckpt_dir=str(tmp_path / "ok"), ckpt_every=2),
+        )
+        sup_ok.run(6)
+
+        fired = {"done": False}
+
+        def bomb(step_idx):
+            if step_idx == 3 and not fired["done"]:
+                fired["done"] = True
+                raise RuntimeError("injected node failure")
+
+        sup_f = Supervisor(
+            train_step,
+            init,
+            {},
+            data,
+            SupervisorConfig(ckpt_dir=str(tmp_path / "fail"), ckpt_every=2),
+            failure_hook=bomb,
+        )
+        hist = sup_f.run(6)
+        assert any(h.restarted for h in hist)
+        np.testing.assert_array_equal(
+            np.asarray(sup_ok.params["w"]), np.asarray(sup_f.params["w"])
+        )
+
+    def test_wall_time_cumulative_and_retries(self, tmp_path):
+        """Regression: ``StepResult.wall_time`` must cover every attempt
+        (the old loop reset the timer per attempt, hiding rollback/retry
+        cost from the straggler EWMA), and ``retries`` must count the
+        failed attempts."""
+        import time as _time
+
+        def train_step(params, opt, batch):
+            return jnp.float32(1.0), params, opt, None
+
+        fired = {"done": False}
+
+        def slow_bomb(step_idx):
+            if step_idx == 2 and not fired["done"]:
+                fired["done"] = True
+                _time.sleep(0.05)  # attempt cost that must be visible
+                raise RuntimeError("injected failure after slow attempt")
+
+        sup = Supervisor(
+            train_step,
+            {"w": jnp.zeros(2)},
+            {},
+            lambda s: jnp.zeros(2),
+            SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=2),
+            failure_hook=slow_bomb,
+        )
+        hist = sup.run(4)
+        bad = [h for h in hist if h.restarted]
+        assert len(bad) == 1 and bad[0].retries == 1
+        assert bad[0].wall_time >= 0.05
+        assert all(h.retries == 0 for h in hist if not h.restarted)
+
     def test_elastic_restore(self, tmp_path):
         params, opt, data, step = _setup()
         sup = Supervisor(
