@@ -1,0 +1,37 @@
+"""Emit planlint plan-shape statistics for the seeded scenarios.
+
+    PYTHONPATH=src python -m benchmarks.planlint_stats [--scenario NAME]
+
+Informational only (ungated): round counts, scheduled-pair counts,
+ragged payload bytes and padding waste per scenario context.  They ride
+along in the ``benchmarks.run --json`` artifact so plan-shape drift is
+visible PR-over-PR without failing the bench gate — correctness gating
+is the blocking ``python -m repro.analysis --all`` CI job instead.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--scenario",
+        action="append",
+        help="scenario name (repeatable; default: all)",
+    )
+    args = ap.parse_args(argv)
+
+    from repro.analysis.cli import plan_stats
+    from repro.analysis.scenarios import build_scenario, scenario_names
+
+    for scen in args.scenario or scenario_names():
+        for ctx in build_scenario(scen):
+            for k, v in plan_stats(ctx).items():
+                common.emit(f"planlint/{ctx.name}/{k}", v, "info")
+
+
+if __name__ == "__main__":
+    main()

@@ -48,6 +48,7 @@ def main(argv=None):
         hierarchical_a2a,
         kernel_bench,
         netsim_latency,
+        planlint_stats,
         replan_bench,
         roofline_report,
         snn_throughput,
@@ -72,6 +73,10 @@ def main(argv=None):
         # delta-replan vs full rebuild: speedup + plan-quality drift gates
         ("replan", replan_bench.main, ["--full"] if args.full else []),
         ("roofline", roofline_report.main, []),
+        # ungated info metrics: plan round counts + ragged padding waste
+        # per seeded scenario (correctness gating lives in the planlint
+        # CI job, not the bench gate)
+        ("planlint", planlint_stats.main, []),
     ]
 
     if args.json:

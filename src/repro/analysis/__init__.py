@@ -1,0 +1,31 @@
+"""planlint — static verifier for plans, schedules, and compiled SPMD steps.
+
+Layer 1 (:mod:`repro.analysis.rules`) lints the plan-chain artifacts —
+traffic, routing table, exchange schedule, ragged plan, topology —
+bundled in a :class:`~repro.analysis.context.PlanContext`; Layer 2
+(:mod:`repro.analysis.traced`) lints the *traced* compiled
+:class:`~repro.snn.distributed.DistributedSNN` step against what the
+schedule says it should emit.  ``python -m repro.analysis`` runs the
+seeded benchmark scenarios (see README "Static plan verification").
+"""
+from repro.analysis.context import PlanContext
+from repro.analysis.rules import RULES, Finding, Rule, catalog, run_lints
+from repro.analysis.traced import (
+    count_collectives,
+    expected_collectives,
+    lint_traced_step,
+    swap_recompile_hazard,
+)
+
+__all__ = [
+    "PlanContext",
+    "RULES",
+    "Finding",
+    "Rule",
+    "catalog",
+    "run_lints",
+    "count_collectives",
+    "expected_collectives",
+    "lint_traced_step",
+    "swap_recompile_hazard",
+]

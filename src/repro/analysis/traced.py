@@ -1,0 +1,150 @@
+"""planlint Layer 2 — lints over the *traced* compiled SPMD step.
+
+Layer 1 checks the plan artifacts against each other; this layer checks
+the plan against what the executor actually stages: the jaxpr of the
+compiled :class:`~repro.snn.distributed.DistributedSNN` step
+(:meth:`~repro.snn.distributed.DistributedSNN.trace_step` — abstract
+tracing, nothing executes).
+
+* :func:`lint_traced_step` — **PL201**: count the collective eqns
+  (``ppermute`` / ``psum`` / ``all_gather``) in the trace and pin them
+  against what the engine's schedule says the step emits
+  (:func:`expected_collectives`); a divergence means executor and plan
+  disagree — the bug class the parity tests only catch dynamically.
+  **PL202**: no host callbacks / infeed / outfeed on the hot path.
+* :func:`swap_recompile_hazard` — **PL203**: hash the ``_StepKey``
+  statics across a plan swap; unequal statics mean the flip stalls on a
+  recompile (stage a warm-up compile off the hot path first).
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.analysis.rules import RULES, Finding
+
+__all__ = [
+    "count_collectives",
+    "expected_collectives",
+    "lint_traced_step",
+    "swap_recompile_hazard",
+]
+
+COLLECTIVES = ("ppermute", "psum", "all_gather")
+
+#: primitive-name fragments that mean the hot path leaves the device
+_HOST_FRAGMENTS = ("callback", "infeed", "outfeed", "host_local")
+
+
+def _walk_eqns(jaxpr):
+    """Yield every eqn of ``jaxpr`` and of all nested sub-jaxprs
+    (pjit/scan/shard_map/... carry theirs inside eqn.params)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            sub = getattr(v, "jaxpr", v)
+            if hasattr(sub, "eqns"):
+                yield from _walk_eqns(sub)
+
+
+def count_collectives(closed_jaxpr) -> dict[str, int]:
+    """Primitive-name → eqn count over the whole trace (nested included).
+
+    The step's time loop is a ``scan``, so each collective appears once
+    regardless of ``n_steps`` — counts are per simulation step.
+    """
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    return dict(Counter(e.primitive.name for e in _walk_eqns(jaxpr)))
+
+
+def expected_collectives(engine) -> dict[str, int]:
+    """Collective-eqn counts the engine's schedule implies for one step.
+
+    * ``'sparse'`` — one slow-axis ``ppermute`` per non-empty masked
+      round; one fast-axis ``all_gather`` (the level-1 group gather)
+      when R > 1; no ``psum``.
+    * ``'ragged'`` — one joint-axis ``ppermute`` per live round; when
+      R > 1, additionally the level-1 ``all_gather`` and one fast-axis
+      ``psum`` per live round (the intra-group bridge re-broadcast).
+    """
+    kind, schedule = engine.step_signature()
+    _g, r = engine._mesh_groups()
+    live = sum(1 for entry in schedule if entry)
+    if kind == "ragged":
+        return {
+            "ppermute": live,
+            "psum": live if r > 1 else 0,
+            "all_gather": 1 if r > 1 else 0,
+        }
+    return {
+        "ppermute": live,
+        "psum": 0,
+        "all_gather": 1 if r > 1 else 0,
+    }
+
+
+def _finding(rule_id: str, message: str, ctx: str) -> Finding:
+    return Finding(
+        rule_id=rule_id,
+        severity=RULES[rule_id].severity,
+        message=message,
+        context=ctx,
+    )
+
+
+def lint_traced_step(
+    engine, *, n_steps: int = 2, name: str = ""
+) -> list[Finding]:
+    """Run PL201 + PL202 over the engine's traced step."""
+    label = name or f"{engine.exchange}@{tuple(engine.mesh.shape.values())}"
+    counts = count_collectives(engine.trace_step(n_steps))
+    out: list[Finding] = []
+    expect = expected_collectives(engine)
+    for prim in COLLECTIVES:
+        got = counts.get(prim, 0)
+        want = expect[prim]
+        if got != want:
+            out.append(
+                _finding(
+                    "PL201",
+                    f"traced step emits {got} {prim} eqn(s), schedule "
+                    f"implies {want} (executor and plan disagree)",
+                    label,
+                )
+            )
+    for prim, got in sorted(counts.items()):
+        if any(f in prim for f in _HOST_FRAGMENTS):
+            out.append(
+                _finding(
+                    "PL202",
+                    f"hot path contains {got} {prim} eqn(s) — host "
+                    "round-trips serialize every simulation step",
+                    label,
+                )
+            )
+    return out
+
+
+def swap_recompile_hazard(engine, plan, *, name: str = "") -> list[Finding]:
+    """PL203 — does flipping ``engine`` to ``plan`` keep the compiled
+    step?  Compares the full ``_StepKey`` statics (what the
+    :func:`~repro.snn.distributed._sparse_step` cache keys on), not just
+    the signature, across the swap."""
+    label = name or "plan-swap"
+    staged = engine.with_plan(plan)
+    k0, k1 = engine._step_key(2), staged._step_key(2)
+    if hash(k0) == hash(k1) and k0 == k1:
+        return []
+    sig_changed = k0.signature != k1.signature
+    detail = (
+        "exchange signature changed (round widths/pairs differ)"
+        if sig_changed
+        else "non-signature statics changed"
+    )
+    return [
+        _finding(
+            "PL203",
+            f"plan swap changes the _StepKey statics — {detail}; the "
+            "flip will stall on a recompile unless warmed up off-path",
+            label,
+        )
+    ]

@@ -17,7 +17,7 @@ consumes this structure.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+from collections.abc import Iterable
 
 import numpy as np
 
@@ -77,21 +77,11 @@ class CommGraph:
         return float(self.edge_traffic().sum())
 
     def validate(self) -> None:
-        m = self.num_vertices
-        if self.indptr.shape != (m + 1,):
-            raise ValueError("indptr must have shape (M + 1,)")
-        if self.indptr[0] != 0 or self.indptr[-1] != self.num_edges:
-            raise ValueError("indptr must start at 0 and end at nnz")
-        if np.any(np.diff(self.indptr) < 0):
-            raise ValueError("indptr must be nondecreasing")
-        if self.num_edges and (
-            self.indices.min() < 0 or self.indices.max() >= m
-        ):
-            raise ValueError("edge indices out of range")
-        if np.any(self.probs < 0) or np.any(self.probs > 1):
-            raise ValueError("probs must lie in [0, 1]")
-        if np.any(self.weights < 0):
-            raise ValueError("weights must be nonnegative")
+        # delegated to the planlint rule registry (rule PL001) so
+        # construction-time checks and `python -m repro.analysis` agree
+        from repro.analysis import invariants
+
+        invariants.check_comm_graph(self)
 
 
 def build_graph(

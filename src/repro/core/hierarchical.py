@@ -28,7 +28,7 @@ Every schedule here is expressed with ``jax.lax`` collectives inside
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from collections.abc import Sequence
 
 import jax
 from jax import lax

@@ -68,10 +68,11 @@ class PartitionResult:
     method: str
 
     def validate(self, g: CommGraph) -> None:
-        if self.assign.shape != (g.num_vertices,):
-            raise ValueError("assign must map every vertex")
-        if self.assign.min() < 0 or self.assign.max() >= self.n_parts:
-            raise ValueError("assign out of range")
+        # delegated to the planlint rule registry (rule PL003) so
+        # construction-time checks and `python -m repro.analysis` agree
+        from repro.analysis import invariants
+
+        invariants.check_partition(self.assign, self.n_parts, g.num_vertices)
 
 
 # ---------------------------------------------------------------------------

@@ -126,23 +126,15 @@ class RoutingTable:
         return path
 
     def validate(self) -> None:
-        n = self.n_devices
-        g = self.n_groups
-        if self.group_of.min() < 0 or self.group_of.max() >= g:
-            raise ValueError("group_of out of range")
-        if self.bridge.size == 0:
-            return
-        offdiag = ~np.eye(g, dtype=bool)
-        b = self.bridge[offdiag]
-        gs_idx = np.broadcast_to(np.arange(g)[:, None], (g, g))[offdiag]
-        bad = (b < 0) | (b >= n)
-        bad |= self.group_of[np.clip(b, 0, n - 1)] != gs_idx
-        if bad.any():
-            i = int(np.argmax(bad))
-            raise ValueError(
-                f"bridge for group pair ({gs_idx[i]}, ·) = {b[i]} is not a "
-                f"member of group {gs_idx[i]}"
-            )
+        # delegated to the planlint rule registry (rules PL005 + PL121)
+        # so construction-time checks and `python -m repro.analysis`
+        # agree.  check_bridge_shares also covers P2P tables, which the
+        # historical body skipped entirely (bridge.size == 0 returned
+        # before any share_coo consistency check).
+        from repro.analysis import invariants
+
+        invariants.check_routing_table(self)
+        invariants.check_bridge_shares(self)
 
 
 def _as_traffic(traffic: TrafficMatrix | np.ndarray) -> TrafficMatrix:

@@ -174,31 +174,11 @@ class TrafficMatrix:
         )
 
     def validate(self) -> None:
-        n = self.n_devices
-        if self.indptr[0] != 0 or self.indptr[-1] != self.nnz:
-            raise ValueError("indptr must start at 0 and end at nnz")
-        if np.any(np.diff(self.indptr) < 0):
-            raise ValueError("indptr must be nondecreasing")
-        if self.data.shape != self.indices.shape:
-            raise ValueError("indices and data must have equal length")
-        if self.nnz:
-            if self.indices.min() < 0 or self.indices.max() >= n:
-                raise ValueError("column indices out of range")
-            rows = self.rows()
-            if np.any(rows == self.indices):
-                raise ValueError("diagonal entries are not allowed")
-            # sorted-columns / merged-duplicates: within a row, columns
-            # must be strictly increasing (equality = unmerged duplicate,
-            # decrease = unsorted) — searchsorted/reduceat consumers
-            # silently misread anything else
-            same_row = rows[1:] == rows[:-1]
-            if np.any(same_row & (np.diff(self.indices) <= 0)):
-                raise ValueError(
-                    "column indices must be strictly increasing within "
-                    "each row (sorted, duplicates merged)"
-                )
-        if np.any(self.data <= 0):
-            raise ValueError("stored traffic must be positive")
+        # delegated to the planlint rule registry (rule PL002) so
+        # construction-time checks and `python -m repro.analysis` agree
+        from repro.analysis import invariants
+
+        invariants.check_traffic_matrix(self)
 
     def apply_delta(
         self,

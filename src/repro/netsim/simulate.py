@@ -26,7 +26,7 @@ injected message was delivered exactly once with no event-queue leaks
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from collections.abc import Sequence
 
 import numpy as np
 

@@ -17,7 +17,7 @@ lowers — one code path from laptop demo to 512-chip mesh.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ sequential composition is tested in ``tests/test_pipeline.py``.
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

@@ -350,14 +350,18 @@ class DistributedSNN:
             signature=self.step_signature(),
         )
 
-    def _run_sparse(self, n_steps: int, *, key: jax.Array) -> jax.Array:
-        """Masked/ragged block exchange + block-CSR accumulation.
+    def _sparse_callable_and_args(
+        self, n_steps: int, *, key: jax.Array
+    ) -> tuple:
+        """The compiled sparse/ragged step plus its prepared inputs.
 
-        The compiled step is built (and cached) by :func:`_sparse_step`
-        keyed on the engine's static signature; this method only
-        prepares the jit *inputs* — neuron state, padded synapse tiles,
-        and the per-round spike index rows.  Swapping to a plan with an
-        equal :meth:`step_signature` therefore reuses the compiled step.
+        The step is built (and cached) by :func:`_sparse_step` keyed on
+        the engine's static signature; this method only prepares the jit
+        *inputs* — neuron state, padded synapse tiles, and the per-round
+        spike index rows.  Swapping to a plan with an equal
+        :meth:`step_signature` therefore reuses the compiled step.
+        Shared by :meth:`run` (executes) and :meth:`trace_step`
+        (abstractly traces — planlint Layer 2).
         """
         syn = self._block_synapses()
         n_dev = self.n_devices
@@ -387,7 +391,23 @@ class DistributedSNN:
         src_arr = jax.device_put(jnp.asarray(src_pad), blk_sharding)
         blk_arr = jax.device_put(jnp.asarray(blk_pad), blk_sharding)
         idx_put = tuple(jax.device_put(a, blk_sharding) for a in idx_arrays)
-        return fn(v0, u0, keys, src_arr, blk_arr, idx_put)
+        return fn, (v0, u0, keys, src_arr, blk_arr, idx_put)
+
+    def _run_sparse(self, n_steps: int, *, key: jax.Array) -> jax.Array:
+        fn, args = self._sparse_callable_and_args(n_steps, key=key)
+        return fn(*args)
+
+    def trace_step(self, n_steps: int = 2, *, key: jax.Array | None = None):
+        """Abstractly trace the compiled sparse/ragged step and return
+        its ``ClosedJaxpr`` — the input of planlint's Layer-2 lints
+        (:mod:`repro.analysis.traced`), which count the collective eqns
+        against what :meth:`step_signature` says the schedule emits.
+        Tracing never executes the step (no data movement)."""
+        if self.exchange not in ("sparse", "ragged"):
+            raise ValueError("trace_step covers exchange='sparse'/'ragged'")
+        key = jax.random.PRNGKey(0) if key is None else key
+        fn, args = self._sparse_callable_and_args(n_steps, key=key)
+        return jax.make_jaxpr(fn)(*args)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,7 +13,7 @@ time on; the Pallas implementation lives in
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

@@ -127,20 +127,11 @@ class BlockSynapses:
         return src, blk
 
     def validate(self) -> None:
-        n = self.n_blocks
-        if self.indptr.shape != (n + 1,) or self.indptr[0] != 0:
-            raise ValueError("indptr must be [n_blocks + 1] starting at 0")
-        if self.indptr[-1] != self.nnzb or np.any(np.diff(self.indptr) < 0):
-            raise ValueError("indptr must be nondecreasing and end at nnzb")
-        if self.nnzb and (self.src_ids.min() < 0 or self.src_ids.max() >= n):
-            raise ValueError("src_ids out of range")
-        if self.blocks.shape != (self.nnzb, self.block_size, self.block_size):
-            raise ValueError("blocks must be [nnzb, B, B]")
-        # sorted-unique src per destination ⇔ the combined CSR key is
-        # strictly increasing (src_ids < n, so dst·n + src never wraps)
-        key = self.dst_of() * n + self.src_ids
-        if np.any(np.diff(key) <= 0):
-            raise ValueError("src_ids not sorted-unique within a destination")
+        # delegated to the planlint rule registry (rule PL004) so
+        # construction-time checks and `python -m repro.analysis` agree
+        from repro.analysis import invariants
+
+        invariants.check_block_synapses(self)
 
     # -- constructors -------------------------------------------------------
 

@@ -22,7 +22,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import numpy as np
 

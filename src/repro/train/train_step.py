@@ -14,7 +14,7 @@ of per-layer chatter; §Perf compares this against ``fsdp_over_pod``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
