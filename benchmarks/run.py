@@ -48,6 +48,7 @@ def main(argv=None):
         hierarchical_a2a,
         kernel_bench,
         netsim_latency,
+        paper_scale,
         planlint_stats,
         replan_bench,
         roofline_report,
@@ -72,6 +73,9 @@ def main(argv=None):
         ("netsim", netsim_latency.main, [] if args.full else ["--reduced"]),
         # delta-replan vs full rebuild: speedup + plan-quality drift gates
         ("replan", replan_bench.main, ["--full"] if args.full else []),
+        # out-of-core pipeline at native N=2,000 — always runs at paper
+        # scale; the out-of-core contract is the point of the bench
+        ("paper_scale", paper_scale.main, []),
         ("roofline", roofline_report.main, []),
         # ungated info metrics: plan round counts + ragged padding waste
         # per seeded scenario (correctness gating lives in the planlint

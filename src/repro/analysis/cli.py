@@ -117,6 +117,41 @@ def _print_catalog() -> None:
         print(f"{r.id}  {r.severity:<7}  [{layer}]  {r.summary}")
 
 
+def rules_markdown() -> str:
+    """The ``docs/RULES.md`` content, generated from the rule registry.
+
+    Deterministic (catalog order) so CI can diff the committed file
+    against ``python -m repro.analysis --rules-md`` and fail on drift —
+    the registry is the single source of truth, the markdown is a view.
+    """
+    from repro.analysis.rules import catalog
+
+    lines = [
+        "# planlint rule catalog",
+        "",
+        "<!-- GENERATED — do not edit.  Regenerate with:",
+        "     PYTHONPATH=src python -m repro.analysis --rules-md > docs/RULES.md -->",
+        "",
+        "Generated from the rule registry (`repro.analysis.rules.RULES`).",
+        "`artifact` rules lint a `PlanContext` (run them with"
+        " `python -m repro.analysis --all`); `traced` rules run against a"
+        " live engine through `repro.analysis.traced`.  Error-severity"
+        " findings fail CI; warnings and infos print but pass.",
+        "",
+        "| id | severity | layer | what it checks |",
+        "|----|----------|-------|----------------|",
+    ]
+    rules = catalog()
+    for r in rules:
+        layer = "traced" if r.check is None else "artifact"
+        lines.append(f"| {r.id} | {r.severity} | {layer} | {r.summary} |")
+    lines += ["", "## Fix hints", ""]
+    for r in rules:
+        lines.append(f"- **{r.id}** — {r.fix_hint}")
+    lines.append("")
+    return "\n".join(lines)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -139,6 +174,11 @@ def main(argv=None) -> int:
     gx.add_argument(
         "--list-rules", action="store_true", help="print the rule catalog"
     )
+    gx.add_argument(
+        "--rules-md",
+        action="store_true",
+        help="print the rule catalog as markdown (the docs/RULES.md source)",
+    )
     ap.add_argument(
         "--stats",
         action="store_true",
@@ -148,6 +188,10 @@ def main(argv=None) -> int:
 
     if args.list_rules:
         _print_catalog()
+        return 0
+
+    if args.rules_md:
+        print(rules_markdown(), end="")
         return 0
 
     if args.table:

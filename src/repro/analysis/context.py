@@ -41,6 +41,12 @@ class PlanContext:
       ragged_plan: :class:`~repro.snn.ragged.RaggedPlan`.
       topology: :class:`~repro.netsim.topology.Topology`.
       dead: device ids evacuated by ``replan(dead=...)``.
+      pod_of: ``int64[N]`` device → pod id (the out-of-core planner's
+        coarse tier; enables PL160's independent traffic aggregation).
+      shard_flows: ``float64[P, P]`` cross-pod bridge-flow ledger — row
+        ``p`` is produced by pod shard ``p`` from its *own* slice of the
+        traffic CSR, so PL160 can cross-check shards pairwise without
+        any global artifact.
       balance_slack: PL130 cap, matching the partitioners' default.
       waste_threshold: PL140 per-round padding-waste warning bar.
     """
@@ -59,6 +65,8 @@ class PlanContext:
     ragged_plan: object | None = None
     topology: object | None = None
     dead: list | None = None
+    pod_of: np.ndarray | None = None
+    shard_flows: np.ndarray | None = None
     balance_slack: float = 0.05
     waste_threshold: float = 0.5
 

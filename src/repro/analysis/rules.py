@@ -56,7 +56,7 @@ class Rule:
     Attributes:
       id: stable identifier (``PL101``); mutation tests pin these.
       severity: 'error' (CLI exit 1) | 'warning' | 'info'.
-      summary: one-line what-it-checks (the README catalog row).
+      summary: one-line what-it-checks (the docs/RULES.md catalog row).
       fix_hint: what to do when it fires.
       check: ``PlanContext -> list[Finding]``; ``None`` for traced-layer
         rules, which run through :mod:`repro.analysis.traced` against a
@@ -133,7 +133,7 @@ def run_lints(ctx, *, rules: list[str] | None = None) -> list[Finding]:
 
 
 def catalog() -> list[Rule]:
-    """Every registered rule, id-sorted (the README table source)."""
+    """Every registered rule, id-sorted (the docs/RULES.md source)."""
     return [RULES[k] for k in sorted(RULES)]
 
 
@@ -742,6 +742,107 @@ def _route_validity(ctx) -> list[Finding]:
                     "PL150",
                     f"scheduled pair ({src} -> {dst}) resolves to an empty "
                     f"route on {topo.name}",
+                    ctx.name,
+                )
+            )
+    return out
+
+
+@rule(
+    "PL160",
+    severity="error",
+    summary="cross-shard conservation: per-shard bridge-flow ledgers agree pairwise and match the pod mask",
+    fix_hint="rebuild each shard's ledger row from its own traffic slice; never edit shard_flows by hand",
+)
+def _cross_shard_flows(ctx) -> list[Finding]:
+    flows = ctx.shard_flows
+    if flows is None:
+        return []
+    f = np.asarray(flows, dtype=np.float64)
+    if f.ndim != 2 or f.shape[0] != f.shape[1]:
+        return [
+            _finding(
+                "PL160",
+                f"shard_flows must be a square [P, P] ledger, got {f.shape}",
+                ctx.name,
+            )
+        ]
+    out = []
+    for s in np.flatnonzero(np.abs(np.diag(f)) > 0):
+        out.append(
+            _finding(
+                "PL160",
+                f"shard {s} books intra-pod traffic on the cross-pod "
+                "ledger diagonal",
+                ctx.name,
+            )
+        )
+    # pairwise agreement: shard s's claim of the s↔t flow (row s, from
+    # s's slice of the CSR) must equal shard t's independent claim (row
+    # t) — the two rows come from disjoint memory, so a corrupted slice
+    # shows up as asymmetry
+    asym = ~np.isclose(f, f.T, rtol=1e-9, atol=1e-12)
+    np.fill_diagonal(asym, False)
+    for s, t in zip(*np.nonzero(np.triu(asym))):
+        out.append(
+            _finding(
+                "PL160",
+                f"shards {s} and {t} disagree on their bridge flow: "
+                f"shard {s}'s ledger says {f[s, t]:.6g}, shard {t}'s "
+                f"says {f[t, s]:.6g}",
+                ctx.name,
+            )
+        )
+    # ledger vs the pod-level consumer mask / schedule
+    if ctx.gmask is not None and np.asarray(ctx.gmask).shape == f.shape:
+        gm = np.asarray(ctx.gmask, dtype=bool).copy()
+        np.fill_diagonal(gm, False)
+        live = f > 0
+        np.fill_diagonal(live, False)
+        for s, t in zip(*np.nonzero(live & ~gm)):
+            out.append(
+                _finding(
+                    "PL160",
+                    f"ledger flow ({s} -> {t}) has no masked pod pair "
+                    "(its bytes would never be scheduled)",
+                    ctx.name,
+                )
+            )
+        for s, t in zip(*np.nonzero(gm & ~live)):
+            out.append(
+                _finding(
+                    "PL160",
+                    f"masked pod pair ({s} -> {t}) carries no ledger flow "
+                    "(dead DCN transfer)",
+                    ctx.name,
+                )
+            )
+    # ledger vs an independent pod aggregation of the global traffic —
+    # O(nnz), the only check that touches a global artifact, and only
+    # when the caller supplies one
+    if (
+        ctx.traffic is not None
+        and hasattr(ctx.traffic, "rows")
+        and ctx.pod_of is not None
+    ):
+        p = f.shape[0]
+        pod_of = np.asarray(ctx.pod_of, dtype=np.int64)
+        tm = ctx.traffic
+        agg = np.bincount(
+            pod_of[tm.rows()] * p + pod_of[tm.indices],
+            weights=tm.data,
+            minlength=p * p,
+        ).reshape(p, p)
+        np.fill_diagonal(agg, 0.0)
+        bad = ~np.isclose(f, agg, rtol=1e-9, atol=1e-12)
+        np.fill_diagonal(bad, False)
+        nbad = int(bad.sum())
+        if nbad:
+            out.append(
+                _finding(
+                    "PL160",
+                    f"{nbad} ledger entries differ from the pod-aggregated "
+                    "device traffic (shard slices desynced from the CSR)",
                     ctx.name,
                 )
             )

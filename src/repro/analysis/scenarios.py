@@ -195,12 +195,38 @@ def _replan_bench() -> list[PlanContext]:
     ]
 
 
+def _outofcore() -> list[PlanContext]:
+    """Out-of-core pipeline artifacts: a reduced two-tier plan (64
+    devices in 4 pods, the ``paper_scale`` pipeline at toy size) — every
+    pod shard's self-contained context plus the cross-shard DCN context
+    carrying the PL160 bridge-flow ledger."""
+    from repro.core.outofcore import plan_out_of_core
+    from repro.snn import generate_brain_model
+
+    bm = generate_brain_model(
+        n_populations=600,
+        n_regions=10,
+        total_neurons=10**7,
+        inter_degree=8.0,
+        long_range_frac=0.3,
+        seed=0,
+    )
+    # lint=False: the CLI *is* the linter here — no point double-linting
+    plan = plan_out_of_core(
+        bm.graph, 64, 16, block_size=4, seed=0, sym_mode="both", lint=False
+    )
+    out = [sh.context for sh in plan.shards]
+    out.append(plan.dcn_context)
+    return out
+
+
 SCENARIOS = {
     "fig3a": _fig3a,
     "fig3b": _fig3b,
     "table2": _table2,
     "snn_throughput": _snn_throughput,
     "replan_bench": _replan_bench,
+    "outofcore": _outofcore,
 }
 
 

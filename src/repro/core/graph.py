@@ -144,6 +144,43 @@ def symmetrize(g: CommGraph) -> CommGraph:
     return build_graph(rows, g.indices, g.probs, g.weights, sym=True)
 
 
+def induced_subgraph(g: CommGraph, vertices: np.ndarray) -> tuple[CommGraph, np.ndarray]:
+    """Subgraph induced by ``vertices``, with ids remapped to ``[0, len)``.
+
+    The workhorse of the out-of-core planner
+    (:func:`repro.core.outofcore.plan_out_of_core`): each pod's local
+    partition problem is the subgraph of its own populations, extracted
+    in O(deg(vertices)) without touching the rest of the graph.  Edges
+    with either endpoint outside ``vertices`` are dropped (they are
+    accounted at the coarser level as cross-pod traffic).
+
+    Returns ``(sub, vertices)`` where ``sub.weights[i]`` belongs to
+    global vertex ``vertices[i]`` (``vertices`` is deduplicated and
+    sorted, so the mapping is monotone).
+    """
+    vertices = np.unique(np.asarray(vertices, dtype=np.int64))
+    if vertices.size and (vertices[0] < 0 or vertices[-1] >= g.num_vertices):
+        raise ValueError("vertices outside [0, num_vertices)")
+    local = np.full(g.num_vertices, -1, dtype=np.int64)
+    local[vertices] = np.arange(vertices.size, dtype=np.int64)
+    rows = g.rows()
+    keep = (local[rows] >= 0) & (local[g.indices] >= 0)
+    src = local[rows[keep]]
+    dst = local[g.indices[keep]]
+    # CSR order survives the monotone remap: rows stay nondecreasing and
+    # per-row columns stay sorted, so the CSR can be assembled directly.
+    indptr = np.zeros(vertices.size + 1, dtype=np.int64)
+    np.cumsum(np.bincount(src, minlength=vertices.size), out=indptr[1:])
+    sub = CommGraph(
+        indptr=indptr,
+        indices=dst,
+        probs=g.probs[keep],
+        weights=g.weights[vertices],
+    )
+    sub.validate()
+    return sub, vertices
+
+
 # ---------------------------------------------------------------------------
 # Sparse test/benchmark graph families (fully vectorized COO construction,
 # usable at M >= 100k — no Python per-edge loops)

@@ -228,13 +228,27 @@ def estimate(
 ) -> LatencyBreakdown:
     """Step-latency estimate under routing table ``tb``, either backend.
 
+    The two backends answer different questions (the PR 5 finding, see
+    ``docs/PAPER_MAPPING.md``): ``'closed_form'`` includes the
+    per-connection host cost (``alpha_conn``) and the superlinear
+    congestion term — the regime where the paper's P2P rows collapse —
+    while ``'netsim'`` is a wire-level floor under which P2P is merely
+    worse, not catastrophic.
+
     Args:
+      cluster: :class:`ClusterModel` constants (link bandwidth,
+        per-connection setup cost, congestion coefficients, unit scale).
       model: ``'closed_form'`` (this module's α-β-congestion formulas)
         or ``'netsim'`` (discrete-event replay over ``topology`` —
         :mod:`repro.netsim`).
+      noise: channel-noise level ``z`` of Table II — scales spike (and
+        hence wire) volume.
       topology: netsim only — a :class:`repro.netsim.Topology` over the
         table's devices; defaults to a single switch at the cluster's
         link bandwidth.
+
+    Returns:
+      :class:`LatencyBreakdown` — per-term seconds plus ``t_total``.
     """
     if model == "closed_form":
         return step_latency(tb, cluster, noise=noise)

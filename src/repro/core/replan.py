@@ -180,6 +180,11 @@ def replan(
         the output of :func:`evacuate_device` for a failure.
       dead: optional device ids barred from bridge duty (failed
         hardware); their groups always re-elect.
+      balance_slack: global group-weight cap the bounded-region regroup
+        enforces (same meaning as in
+        :func:`~repro.core.routing.two_level_routing`).
+      sweeps: refinement sweeps over the touched region — bounded work,
+        so replan cost scales with the delta, not the table.
 
     Returns:
       :class:`ReplanResult` with a validated table equivalent to what a

@@ -303,7 +303,11 @@ def two_level_routing(
         candidate set (:func:`sweep_candidates`) over a *shared* device
         graph and keeps the G minimizing the peak level-2 (bridge) egress —
         the paper's "update the best optimal solution" outer loop.
-      itermax: the paper's ``T``.
+      itermax: the paper's ``T`` — refinement sweeps in the grouping
+        step.
+      balance_slack: group-weight balance cap the grouping honors
+        (``max group weight <= (1 + slack) * mean``).
+      seed: grouping RNG seed; the routing itself is deterministic.
       grouping: 'greedy' (Algorithm 2 proper), 'multilevel' (PR 1's
         multilevel partitioner on the device graph), or 'genetic' /
         'random' (the baselines of Fig. 3(b)).

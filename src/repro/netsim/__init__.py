@@ -35,6 +35,7 @@ from repro.netsim.topology import (
     topology_from_config,
     two_tier,
 )
+from repro.netsim.shards import aggregated_table_rounds, p2p_rounds, sharded_rounds
 from repro.netsim.whatif import payload_sharding_whatif, sharded_ragged_rounds
 
 __all__ = [
@@ -58,6 +59,9 @@ __all__ = [
     "ragged_rounds",
     "table_rounds",
     "a2a_rounds",
+    "sharded_rounds",
+    "aggregated_table_rounds",
+    "p2p_rounds",
     "total_bytes",
     "sharded_ragged_rounds",
     "payload_sharding_whatif",

@@ -27,6 +27,7 @@ from repro.snn.ragged import (
     RaggedRound,
     bridge_inner_from_table,
     build_ragged_plan,
+    build_ragged_plan_from_mask,
 )
 from repro.snn.distributed import (
     DistributedSNN,
@@ -56,6 +57,7 @@ __all__ = [
     "RaggedRound",
     "bridge_inner_from_table",
     "build_ragged_plan",
+    "build_ragged_plan_from_mask",
     "DistributedSNN",
     "PlanBuffer",
     "group_mesh_permutation",

@@ -34,7 +34,13 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["RaggedRound", "RaggedPlan", "build_ragged_plan", "bridge_inner_from_table"]
+__all__ = [
+    "RaggedRound",
+    "RaggedPlan",
+    "build_ragged_plan",
+    "build_ragged_plan_from_mask",
+    "bridge_inner_from_table",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,28 +230,126 @@ def build_ragged_plan(
             f"syn has {syn.n_blocks} blocks for a ({g}, {r}) mesh ({n_dev} devices)"
         )
     b = syn.block_size
-    rb = r * b
     group_of = np.arange(n_dev, dtype=np.int64) // r
+    bridge_inner = _normalize_bridge_inner(bridge_inner, g, r)
+    pair_cols = _pair_columns(syn, group_of, r, mask)
+    return RaggedPlan(
+        mesh_shape=(g, r),
+        block_size=b,
+        rounds=_rounds_from_pair_cols(pair_cols, g, r, b, bridge_inner),
+        pair_cols=pair_cols,
+    )
+
+
+def build_ragged_plan_from_mask(
+    mask: np.ndarray,
+    mesh_shape: tuple[int, int],
+    block_size: int,
+    *,
+    bridge_inner: np.ndarray | None = None,
+) -> RaggedPlan:
+    """Plan the ragged level-2 exchange from a consumer mask alone.
+
+    The out-of-core path (:func:`repro.core.outofcore.plan_out_of_core`):
+    at planning time no synapse tiles exist yet, only the routing table's
+    device-level consumer mask, so every masked cross-group pair ships
+    the full ``block_size`` lanes of each masked source device — the same
+    safe superset :func:`build_ragged_plan`'s ``mask`` branch uses for
+    tile-less pairs, with identical round construction (shared helper),
+    so the resulting plan passes the same PL102/PL140–142 lints.
+
+    Args:
+      mask: ``bool[n_dev, n_dev]`` consumer mask in **mesh order**
+        (device ``d`` in group ``d // R`` — permute a routing table's
+        :func:`~repro.core.routing.needed_sources` output with the
+        group-contiguous layout first).
+      mesh_shape: ``(G, R)``.
+      block_size: spike lanes per device block ``B``.
+      bridge_inner: as in :func:`build_ragged_plan`.
+
+    Returns:
+      :class:`RaggedPlan` whose payloads cover every masked cross-group
+      flow at full block width.
+    """
+    g, r = int(mesh_shape[0]), int(mesh_shape[1])
+    n_dev = g * r
+    mask = np.asarray(mask, dtype=bool)
+    if mask.shape != (n_dev, n_dev):
+        raise ValueError(f"mask must be [{n_dev}, {n_dev}] for a ({g}, {r}) mesh")
+    b = int(block_size)
+    if b <= 0:
+        raise ValueError("block_size must be positive")
+    bridge_inner = _normalize_bridge_inner(bridge_inner, g, r)
+    pair_cols = _pair_columns_from_mask(mask, g, r, b)
+    return RaggedPlan(
+        mesh_shape=(g, r),
+        block_size=b,
+        rounds=_rounds_from_pair_cols(pair_cols, g, r, b, bridge_inner),
+        pair_cols=pair_cols,
+    )
+
+
+def _pair_columns_from_mask(
+    mask: np.ndarray, g: int, r: int, b: int
+) -> dict[tuple[int, int], np.ndarray]:
+    """Full-block consumed columns per masked cross-group pair (mesh
+    order): the union over masked source devices of their ``b``-lane
+    slots inside the group block."""
+    src_d, dst_d = np.nonzero(mask)
+    gs_a, gd_a = src_d // r, dst_d // r
+    cross = gs_a != gd_a
+    if not np.any(cross):
+        return {}
+    pk = gs_a[cross] * g + gd_a[cross]
+    slot = src_d[cross] % r
+    order = np.argsort(pk, kind="stable")
+    pk, slot = pk[order], slot[order]
+    keys, starts = np.unique(pk, return_index=True)
+    bounds = np.append(starts, pk.size)
+    lanes = np.arange(b, dtype=np.int64)
+    out: dict[tuple[int, int], np.ndarray] = {}
+    for key, lo, hi in zip(keys.tolist(), bounds[:-1].tolist(), bounds[1:].tolist()):
+        slots = np.unique(slot[lo:hi])
+        out[(key // g, key % g)] = (slots[:, None] * b + lanes[None, :]).ravel()
+    return out
+
+
+def _normalize_bridge_inner(
+    bridge_inner: np.ndarray | None, g: int, r: int
+) -> np.ndarray:
+    """Validate a ``[G, G]`` bridge-inner map, or build the round-robin
+    default (member ``gd % R`` of ``gs`` bridges ``gs → gd``)."""
     if bridge_inner is None:
-        # round-robin by destination group: member (gd % R) of gs bridges
-        # gs → gd, spreading bridge duty evenly across the group
         bridge_inner = np.arange(g, dtype=np.int64)[None, :] % r
         bridge_inner = np.broadcast_to(bridge_inner, (g, g)).copy()
         np.fill_diagonal(bridge_inner, -1)
-    else:
-        bridge_inner = np.asarray(bridge_inner, dtype=np.int64)
-        if bridge_inner.shape != (g, g):
-            raise ValueError("bridge_inner must be [G, G]")
-        off = ~np.eye(g, dtype=bool)
-        bad = off & ((bridge_inner < 0) | (bridge_inner >= r))
-        if bad.any():
-            gs_bad, gd_bad = np.argwhere(bad)[0]
-            raise ValueError(
-                f"bridge_inner[{gs_bad}, {gd_bad}] = "
-                f"{bridge_inner[gs_bad, gd_bad]} outside [0, {r})"
-            )
+        return bridge_inner
+    bridge_inner = np.asarray(bridge_inner, dtype=np.int64)
+    if bridge_inner.shape != (g, g):
+        raise ValueError("bridge_inner must be [G, G]")
+    off = ~np.eye(g, dtype=bool)
+    bad = off & ((bridge_inner < 0) | (bridge_inner >= r))
+    if bad.any():
+        gs_bad, gd_bad = np.argwhere(bad)[0]
+        raise ValueError(
+            f"bridge_inner[{gs_bad}, {gd_bad}] = "
+            f"{bridge_inner[gs_bad, gd_bad]} outside [0, {r})"
+        )
+    return bridge_inner
 
-    pair_cols = _pair_columns(syn, group_of, r, mask)
+
+def _rounds_from_pair_cols(
+    pair_cols: dict[tuple[int, int], np.ndarray],
+    g: int,
+    r: int,
+    b: int,
+    bridge_inner: np.ndarray,
+) -> tuple[RaggedRound, ...]:
+    """Assemble the per-shift :class:`RaggedRound`\\ s from consumed
+    columns — shared by the tile-driven and mask-driven planners so both
+    produce byte-identical schedules for identical ``pair_cols``."""
+    n_dev = g * r
+    rb = r * b
     rounds: list[RaggedRound] = []
     for shift in range(1, g):
         pairs = [
@@ -289,9 +393,4 @@ def build_ragged_plan(
                 recv_idx=recv_idx,
             )
         )
-    return RaggedPlan(
-        mesh_shape=(g, r),
-        block_size=b,
-        rounds=tuple(rounds),
-        pair_cols=pair_cols,
-    )
+    return tuple(rounds)

@@ -1,0 +1,96 @@
+"""Markdown link and source-pointer checker (stdlib only).
+
+    python tools/check_links.py README.md ROADMAP.md docs/*.md
+
+Checks two things the docs lean on:
+
+* relative markdown links ``[text](path)`` resolve to a file or
+  directory (``http(s)://`` and pure ``#anchor`` targets are skipped);
+* backticked source pointers like ``src/repro/core/routing.py:285``
+  name an existing file whose line count covers the anchor — so a
+  refactor that moves a documented symbol fails the docs CI job instead
+  of silently rotting the map.
+
+Pointers may be repo-root-relative or abbreviated (``routing.py:285``);
+abbreviated ones are resolved by unique path-suffix search, and an
+ambiguous suffix is an error.  Exit status is the number of broken
+references.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `path/to/file.py:123` inside backticks (any text column)
+CODE_PTR = re.compile(r"`([\w./-]+\.(?:py|md|json|yml|yaml|toml|ini|txt)):(\d+)`")
+
+
+def _resolve(target: str, md_dir: Path) -> Path | None:
+    """Resolve a path that may be md-relative, root-relative, or a
+    unique path suffix anywhere in the repo."""
+    for base in (md_dir, ROOT):
+        cand = (base / target).resolve()
+        if cand.exists():
+            return cand
+    hits = [
+        p
+        for p in ROOT.rglob(Path(target).name)
+        if p.as_posix().endswith("/" + target) and ".git" not in p.parts
+    ]
+    if len(hits) == 1:
+        return hits[0]
+    return None
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    md_dir = md.parent
+
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        plain = target.split("#", 1)[0]
+        if not plain:
+            continue
+        if _resolve(plain, md_dir) is None:
+            errors.append(f"{md}: broken link -> {target}")
+
+    for m in CODE_PTR.finditer(text):
+        target, line = m.group(1), int(m.group(2))
+        path = _resolve(target, md_dir)
+        if path is None:
+            errors.append(f"{md}: pointer to missing file -> {target}:{line}")
+            continue
+        n_lines = len(path.read_text(encoding="utf-8").splitlines())
+        if line > n_lines:
+            errors.append(
+                f"{md}: stale pointer -> {target}:{line} "
+                f"(file has {n_lines} lines)"
+            )
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = [Path(a) for a in argv] or sorted(
+        [ROOT / "README.md", *(ROOT / "docs").glob("*.md")]
+    )
+    errors: list[str] = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: no such markdown file")
+            continue
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e)
+    print(f"{len(files)} file(s) checked, {len(errors)} broken reference(s)")
+    return min(len(errors), 1)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
