@@ -1,0 +1,234 @@
+"""Fault-injection bench: replay a fixed chaos schedule, gate recovery.
+
+Scenario (fixed — the point is a *reproducible* disaster, not a random
+one): a 256-device / 16-group planted-community deployment takes, in
+one 12-step run,
+
+* two **fatal device crashes** (steps 3 and 7, devices 37 and 121 —
+  one of them an elected bridge, the worst case for Algorithm 2),
+* one **link-outage window** on a fat-tree leaf→spine uplink wide
+  enough to force mid-replay reroutes via a backup spine,
+* one **straggler** (device 200 at 4× slowdown) inflating its egress
+  link costs.
+
+Three closed loops are gated (benchmarks/baseline.json):
+
+* **Recovery vs rebuild** — batched ``evacuate_devices`` + single
+  ``replan(dead=[...])`` call, wall-clock vs a from-scratch
+  ``two_level_routing`` on the evacuated matrix
+  (``fault/recovery_speedup``, tolerance pinned so the failure
+  threshold is exactly 1×), plus planlint over the recovered plan with
+  the dead devices and downed links declared — PL170/PL171 must stay
+  silent (``fault/recovered_plan_lint_clean``).
+* **Trajectory bit-equality** — a deterministic toy LIF loop under the
+  :class:`~repro.train.fault_tolerance.Supervisor` with the chaos
+  ``supervisor_hook`` injecting the crashes; after rollback + replay
+  the per-step spike raster must be bit-identical to a failure-free
+  run (``fault/trajectory_bit_equal``), and the availability fraction
+  (committed steps / total attempts) must clear 0.7
+  (``fault/availability_ok``).
+* **Outage replay** — the recovered plan's forwarding schedule replayed
+  through netsim with the outage + straggler applied: messages reroute
+  around the downed uplink (conservation is asserted inside
+  ``simulate``) and the straggler is excluded from ``worst_device``
+  blame when its link was the one down (``fault/outage_rerouted``).
+
+Wall-clock details (recovery ms, stall seconds) go to the bench
+artifact ungated.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.chaos import (
+    FaultEvent,
+    FaultSchedule,
+    apply_stragglers,
+    filter_dead_rounds,
+    link_outages,
+    supervisor_hook,
+)
+from repro.core.graph import planted_partition_graph
+from repro.core.replan import evacuate_devices, replan
+from repro.core.routing import two_level_routing
+from repro.core.traffic import TrafficMatrix
+
+N, G = 256, 16
+N_STEPS = 12
+CRASH_DEVICES = (37, 121)
+STRAGGLER = 200
+OUTAGE = (0.0, 4.0e-5)  # seconds: covers the replayed rounds' injections
+
+
+def _best_of(fn, reps=3):
+    best, out = np.inf, None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def _schedule(outage_link: int) -> FaultSchedule:
+    """The fixed disaster: 2 fatal crashes + 1 outage + 1 straggler."""
+    return FaultSchedule(
+        events=(
+            FaultEvent("device_crash", step=3, device=CRASH_DEVICES[0]),
+            FaultEvent("device_crash", step=7, device=CRASH_DEVICES[1]),
+            FaultEvent(
+                "link_down",
+                step=5,
+                link=outage_link,
+                t_down=OUTAGE[0],
+                t_up=OUTAGE[1],
+            ),
+            FaultEvent("straggler", step=0, device=STRAGGLER, slowdown=4.0),
+        ),
+        seed=0,
+    )
+
+
+def _lif_run(schedule: FaultSchedule | None, ckpt_dir: str):
+    """Deterministic toy LIF membrane loop under the Supervisor.
+
+    Returns (raster, history): ``raster[step]`` is the spike vector the
+    step *committed* (replays overwrite, exactly as a restarted job
+    would recompute them), so bit-comparing rasters across runs is the
+    trajectory-equality check.
+    """
+    from repro.train.fault_tolerance import Supervisor, SupervisorConfig
+
+    n = 64
+    rng = np.random.default_rng(42)
+    w = rng.uniform(-0.2, 0.5, (n, n))
+    raster: dict[int, np.ndarray] = {}
+
+    def data_iter(step):
+        # deterministic per-step input current, recomputable after a
+        # rollback (the replay must not consume a stateful stream)
+        g = np.random.default_rng(1000 + step)
+        return {"i_ext": g.uniform(0.0, 1.2, n), "step": step}
+
+    def train_step(params, opt_state, batch):
+        v = params["v"]
+        spikes = (v >= 1.0).astype(np.float64)
+        v = np.where(spikes > 0, 0.0, v)
+        v = 0.9 * v + batch["i_ext"] + 0.3 * (w @ spikes)
+        raster[int(batch["step"])] = spikes
+        return float(spikes.sum()), {"v": v}, opt_state, None
+
+    hook = supervisor_hook(schedule) if schedule is not None else None
+    sup = Supervisor(
+        train_step,
+        {"v": np.zeros(n)},
+        {"t": np.zeros(1)},
+        data_iter,
+        SupervisorConfig(ckpt_dir=ckpt_dir, ckpt_every=2, seed=0),
+        failure_hook=hook,
+        evacuate_hook=lambda devs: True,
+    )
+    hist = sup.run(N_STEPS)
+    return raster, hist
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.parse_args(argv)
+
+    from repro.analysis import PlanContext, run_lints
+    from repro.netsim import fat_tree, simulate, table_rounds
+
+    graph, _ = planted_partition_graph(
+        N, n_blocks=G, avg_degree=32, p_in_frac=0.9, seed=0
+    )
+    tm = TrafficMatrix.from_coo(
+        graph.rows(), graph.indices, graph.edge_traffic(), N
+    ).symmetrized(halve=True)
+    wg = np.ones(N)
+    tb = two_level_routing(tm, wg, G, seed=0)
+
+    topo = fat_tree(N, N // G)
+    # outage on the leaf->spine uplink the first crash victim's pod uses
+    outage_link = int(topo.params["leaf_up"][CRASH_DEVICES[0] // (N // G)][0])
+    sched = _schedule(outage_link)
+
+    # -- recovery vs rebuild -------------------------------------------
+    dead = list(sched.dead_devices())
+
+    def recover():
+        ev = evacuate_devices(tb, wg, dead)
+        return replan(tb, ev.wg_after, ev.delta, dead=dead), ev
+
+    (res, ev), t_recover = _best_of(recover)
+    tb_rec = res.table
+
+    # the rebuild gets the evacuated matrix for free — even so, a full
+    # two_level_routing (device graph + grouping + LPT election) loses
+    # to the bounded-region incremental path
+    tm_evac = tm.apply_delta(*ev.delta)
+    _, t_rebuild = _best_of(
+        lambda: two_level_routing(tm_evac, ev.wg_after, G, seed=0)
+    )
+
+    tmd = tb_rec.device_traffic
+    isolated = (
+        not np.any(np.isin(tmd.rows(), dead))
+        and not np.any(np.isin(tmd.indices, dead))
+        and not np.any(np.isin(tb_rec.bridge, dead))
+    )
+    emit("fault/recovery_ms", round(t_recover * 1e3, 2), "evacuate+replan_batch")
+    emit("fault/rebuild_ms", round(t_rebuild * 1e3, 2), "two_level_routing")
+    emit(
+        "fault/recovery_speedup",
+        round(t_rebuild / t_recover, 2),
+        "rebuild_over_recover",
+    )
+    emit("fault/dead_isolated", int(isolated), "no_traffic_no_bridge_duty")
+
+    # planlint: recovered plan must route around every dead device and
+    # every downed link (PL170 / PL171)
+    findings = run_lints(
+        PlanContext.from_table(
+            tb_rec,
+            name="fault_bench.recovered",
+            topology=topo,
+            dead=dead,
+            down_links=[outage_link],
+        )
+    )
+    errors = [f for f in findings if f.severity == "error"]
+    emit("fault/recovered_plan_lint_clean", int(not errors), "planlint_PL17x")
+
+    # -- trajectory bit-equality under the supervisor ------------------
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d_fault, tempfile.TemporaryDirectory() as d_clean:
+        raster_f, hist = _lif_run(sched, d_fault)
+        raster_c, _ = _lif_run(None, d_clean)
+    bit_equal = sorted(raster_c) == sorted(raster_f) and all(
+        np.array_equal(raster_c[s], raster_f[s]) for s in raster_c
+    )
+    steps_lost = len(hist) - N_STEPS  # replayed (recomputed) steps
+    availability = N_STEPS / len(hist)
+    emit("fault/trajectory_bit_equal", int(bit_equal), "raster_vs_failure_free")
+    emit("fault/steps_lost", steps_lost, "replayed_after_rollback")
+    emit("fault/availability", round(availability, 4), "committed/total_steps")
+    emit("fault/availability_ok", int(availability >= 0.7), "geq_0.7")
+
+    # -- netsim outage + straggler replay ------------------------------
+    rounds = filter_dead_rounds(table_rounds(tb_rec, bytes_per_unit=64.0), dead)
+    topo_slow = apply_stragglers(topo, sched)
+    sim = simulate(rounds, topo_slow, outages=link_outages(sched))
+    blamed = sim.worst_device()
+    emit("fault/outage_rerouted", int(sim.n_rerouted > 0), "backup_spine_taken")
+    emit("fault/outage_stall_us", round(sim.outage_stall_s * 1e6, 3), "wait_for_link_up")
+    emit("fault/sim_latency_us", round(sim.t_total * 1e6, 3), "recovered_plan_replay")
+    emit("fault/worst_device", blamed, "outage_normalized_blame")
+
+
+if __name__ == "__main__":
+    main()

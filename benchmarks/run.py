@@ -43,6 +43,7 @@ def main(argv=None):
         common,
         fig3a_partition_traffic,
         fig3b_routing_traffic,
+        fault_bench,
         fig4_connections,
         table2_latency,
         hierarchical_a2a,
@@ -73,6 +74,9 @@ def main(argv=None):
         ("netsim", netsim_latency.main, [] if args.full else ["--reduced"]),
         # delta-replan vs full rebuild: speedup + plan-quality drift gates
         ("replan", replan_bench.main, ["--full"] if args.full else []),
+        # fixed chaos schedule: batched recovery vs rebuild, trajectory
+        # bit-equality under the supervisor, netsim outage reroute
+        ("fault", fault_bench.main, []),
         # out-of-core pipeline at native N=2,000 — always runs at paper
         # scale; the out-of-core contract is the point of the bench
         ("paper_scale", paper_scale.main, []),

@@ -41,6 +41,9 @@ class PlanContext:
       ragged_plan: :class:`~repro.snn.ragged.RaggedPlan`.
       topology: :class:`~repro.netsim.topology.Topology`.
       dead: device ids evacuated by ``replan(dead=...)``.
+      down_links: link ids currently in an outage window
+        (:class:`~repro.netsim.simulate.LinkOutage`); PL171 checks every
+        scheduled pair still has a route avoiding them.
       pod_of: ``int64[N]`` device → pod id (the out-of-core planner's
         coarse tier; enables PL160's independent traffic aggregation).
       shard_flows: ``float64[P, P]`` cross-pod bridge-flow ledger — row
@@ -65,6 +68,7 @@ class PlanContext:
     ragged_plan: object | None = None
     topology: object | None = None
     dead: list | None = None
+    down_links: list | None = None
     pod_of: np.ndarray | None = None
     shard_flows: np.ndarray | None = None
     balance_slack: float = 0.05

@@ -688,16 +688,10 @@ def _column_bounds(ctx) -> list[Finding]:
     return out
 
 
-@rule(
-    "PL150",
-    severity="error",
-    summary="topology routes: every scheduled wire pair has a netsim route",
-    fix_hint="check the topology's n_devices / device numbering against the plan's mesh",
-)
-def _route_validity(ctx) -> list[Finding]:
-    topo = ctx.topology
-    if topo is None:
-        return []
+def _wire_pairs(ctx) -> set[tuple[int, int]]:
+    """Every (src, dst) device pair the context schedules on the wire:
+    ragged-plan messages, the sparse ppermute schedule lowered onto the
+    mesh, and Algorithm-2 bridge pairs.  Shared by PL150/PL170/PL171."""
     pairs: set[tuple[int, int]] = set()
     if ctx.ragged_plan is not None:
         for rnd in ctx.ragged_plan.round_messages():
@@ -720,6 +714,20 @@ def _route_validity(ctx) -> list[Finding]:
             if gs == gd:
                 continue
             pairs.add((int(tb.bridge[gs, gd]), int(tb.bridge[gd, gs])))
+    return pairs
+
+
+@rule(
+    "PL150",
+    severity="error",
+    summary="topology routes: every scheduled wire pair has a netsim route",
+    fix_hint="check the topology's n_devices / device numbering against the plan's mesh",
+)
+def _route_validity(ctx) -> list[Finding]:
+    topo = ctx.topology
+    if topo is None:
+        return []
+    pairs = _wire_pairs(ctx)
     out = []
     for src, dst in sorted(pairs):
         if src == dst:
@@ -843,6 +851,101 @@ def _cross_shard_flows(ctx) -> list[Finding]:
                     "PL160",
                     f"{nbad} ledger entries differ from the pod-aggregated "
                     "device traffic (shard slices desynced from the CSR)",
+                    ctx.name,
+                )
+            )
+    return out
+
+
+@rule(
+    "PL170",
+    severity="error",
+    summary="dead-device isolation: a recovered plan schedules nothing on an evacuated device",
+    fix_hint="re-run evacuate_devices/replan(dead=...) — a dead device left in a bridge row or traffic CSR will be waited on forever at runtime",
+)
+def _dead_device_isolation(ctx) -> list[Finding]:
+    if not ctx.dead:
+        return []
+    dead = {int(d) for d in ctx.dead}
+    out = []
+    # ragged-plan messages carry real payload; the mesh-wide ppermute
+    # lanes of a group schedule are NOT checked — a dead replica's lanes
+    # are zero-payload and the executor trash-filters them
+    # (repro.chaos.filter_dead_rounds)
+    if ctx.ragged_plan is not None:
+        for rnd in ctx.ragged_plan.round_messages():
+            for s, d, _ in rnd:
+                hit = dead.intersection((int(s), int(d)))
+                if hit:
+                    out.append(
+                        _finding(
+                            "PL170",
+                            f"ragged-plan message ({int(s)} -> {int(d)}) "
+                            f"touches dead device(s) {sorted(hit)} — the "
+                            "exchange would stall waiting on evacuated "
+                            "hardware",
+                            ctx.name,
+                        )
+                    )
+    tb = ctx.table
+    if tb is not None and tb.bridge.size:
+        bridge = np.asarray(tb.bridge)
+        for gs, gd in zip(*np.nonzero(np.isin(bridge, sorted(dead)))):
+            out.append(
+                _finding(
+                    "PL170",
+                    f"bridge[{gs}, {gd}] = {int(bridge[gs, gd])} elects a "
+                    "dead device as a group bridge",
+                    ctx.name,
+                )
+            )
+    tm = ctx.traffic
+    if tm is not None and hasattr(tm, "rows"):
+        dead_arr = np.asarray(sorted(dead), dtype=np.int64)
+        n_src = int(np.isin(tm.rows(), dead_arr).sum())
+        n_dst = int(np.isin(tm.indices, dead_arr).sum())
+        if n_src or n_dst:
+            out.append(
+                _finding(
+                    "PL170",
+                    f"device traffic still books {n_src} sent and "
+                    f"{n_dst} received entries on dead devices (the "
+                    "evacuation never re-keyed them)",
+                    ctx.name,
+                )
+            )
+    return out
+
+
+@rule(
+    "PL171",
+    severity="error",
+    summary="outage routing: every scheduled pair avoids the downed links (reroute exists)",
+    fix_hint="the topology has no backup route around the outage — stall the exchange until the link returns or replan onto a multipath topology",
+)
+def _outage_routing(ctx) -> list[Finding]:
+    topo = ctx.topology
+    if topo is None or not ctx.down_links:
+        return []
+    down = frozenset(int(l) for l in ctx.down_links)
+    out = []
+    for src, dst in sorted(_wire_pairs(ctx)):
+        if src == dst:
+            continue
+        try:
+            route = topo.route(src, dst)
+        except ValueError:
+            continue  # PL150's finding, not ours
+        if not down.intersection(route):
+            continue
+        alt = topo.route_avoiding(src, dst, down)
+        if alt is None:
+            out.append(
+                _finding(
+                    "PL171",
+                    f"scheduled pair ({src} -> {dst}) rides downed "
+                    f"link(s) {sorted(down.intersection(route))} on "
+                    f"{topo.name} and no backup route avoids the outage",
                     ctx.name,
                 )
             )

@@ -45,10 +45,13 @@ from repro.core.traffic import TrafficMatrix
 
 __all__ = [
     "ReplanResult",
+    "Evacuation",
     "symmetric_delta",
     "local_regroup",
     "replan",
     "evacuate_device",
+    "evacuate_devices",
+    "rejoin_devices",
 ]
 
 
@@ -193,28 +196,51 @@ def replan(
     """
     if not isinstance(tb.device_traffic, TrafficMatrix):
         raise ValueError("replan needs the sparse TrafficMatrix path")
-    if tb.bridge.size == 0:
-        raise ValueError("replan needs a grouped two-level table (not p2p)")
     src, dst, dvals = delta
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     dvals = np.asarray(dvals, dtype=np.float64)
-    tm_old: TrafficMatrix = tb.device_traffic
-    tm_new = tm_old.apply_delta(src, dst, dvals)
-    n, g = tb.n_devices, tb.n_groups
-    wg = np.asarray(wg, dtype=np.float64)
+    tm_new = tb.device_traffic.apply_delta(src, dst, dvals)
     dead_idx = (
         np.unique(np.asarray(dead, dtype=np.int64).ravel())
         if dead is not None
         else np.empty(0, dtype=np.int64)
     )
+    hot = dvals != 0
+    touched_dev = np.unique(np.concatenate([src[hot], dst[hot], dead_idx]))
+    return _replan_core(
+        tb,
+        wg,
+        tm_new,
+        touched_dev,
+        dead_idx,
+        balance_slack=balance_slack,
+        sweeps=sweeps,
+    )
+
+
+def _replan_core(
+    tb: RoutingTable,
+    wg: np.ndarray,
+    tm_new: TrafficMatrix,
+    touched_dev: np.ndarray,
+    dead_idx: np.ndarray,
+    *,
+    balance_slack: float,
+    sweeps: int,
+) -> ReplanResult:
+    """Shared tail of :func:`replan` / :func:`rejoin_devices`: bounded
+    regroup + restricted re-election on an already-edited matrix."""
+    if tb.bridge.size == 0:
+        raise ValueError("replan needs a grouped two-level table (not p2p)")
+    tm_old: TrafficMatrix = tb.device_traffic
+    n, g = tb.n_devices, tb.n_groups
+    wg = np.asarray(wg, dtype=np.float64)
     dead_mask = np.zeros(n, dtype=bool)
     dead_mask[dead_idx] = True
 
     # 1. bounded-region regroup: only groups holding a delta endpoint or
     # a dead device may move devices
-    hot = dvals != 0
-    touched_dev = np.unique(np.concatenate([src[hot], dst[hot], dead_idx]))
     region = (
         np.unique(tb.group_of[touched_dev])
         if touched_dev.size
@@ -270,6 +296,28 @@ def replan(
     )
 
 
+def _rekey_triplets(
+    tm: TrafficMatrix, dead: int, host: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Delta triplets that move every stored flow of ``dead`` onto
+    ``host``: each entry is removed exactly (negating its stored
+    volume) and re-added keyed to the host."""
+    rows, cols, vals = tm.rows(), tm.indices, tm.data
+    out_m = rows == dead
+    in_m = cols == dead
+    n_out, n_in = int(out_m.sum()), int(in_m.sum())
+    d_src = np.concatenate(
+        [rows[out_m], np.full(n_out, host, np.int64), rows[in_m], rows[in_m]]
+    )
+    d_dst = np.concatenate(
+        [cols[out_m], cols[out_m], cols[in_m], np.full(n_in, host, np.int64)]
+    )
+    d_val = np.concatenate(
+        [-vals[out_m], vals[out_m], -vals[in_m], vals[in_m]]
+    )
+    return d_src, d_dst, d_val
+
+
 def evacuate_device(
     tb: RoutingTable,
     wg: np.ndarray,
@@ -286,41 +334,180 @@ def evacuate_device(
     delta's self-loops are dropped by ``apply_delta``).
 
     Returns ``(delta, wg_new, host)`` — feed the delta plus
-    ``dead=[dead]`` to :func:`replan`.
+    ``dead=[dead]`` to :func:`replan`.  For several simultaneous
+    failures (or an invertible record) use :func:`evacuate_devices`.
+    """
+    ev = evacuate_devices(tb, wg, [dead], hosts=None if host is None else [host])
+    return ev.delta, ev.wg_after.copy(), int(ev.hosts[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class Evacuation:
+    """A recorded (and therefore invertible) batch evacuation.
+
+    Attributes:
+      delta: concatenated COO edit triplets ``(src, dst, dvals)`` for
+        the whole batch — ``apply_delta`` is additive, so applying the
+        concatenation to the pre-failure matrix equals applying each
+        device's re-key sequentially.
+      dead: ``int64[k]`` evacuated devices, in evacuation order.
+      hosts: ``int64[k]`` surviving host chosen for each dead device.
+      wg_before / wg_after: per-device weights around the evacuation —
+        ``wg_before`` is what :func:`rejoin_devices` restores.
+      orig: the pre-failure stored triplets of every entry the batch
+        touched — the snapshot :meth:`inverse_delta` restores them
+        from (a float sum-then-subtract round-trip is not bit-exact,
+        so the inverse re-writes originals instead of negating sums).
+      n_devices: matrix dimension (key encoding for the inverse).
+    """
+
+    delta: tuple[np.ndarray, np.ndarray, np.ndarray]
+    dead: np.ndarray
+    hosts: np.ndarray
+    wg_before: np.ndarray
+    wg_after: np.ndarray
+    orig: tuple[np.ndarray, np.ndarray, np.ndarray]
+    n_devices: int
+
+    def restore_matrix(self, tm_now: TrafficMatrix) -> TrafficMatrix:
+        """Restore every touched entry to its pre-failure value,
+        bit-exactly, in two delta passes: first the touched keys'
+        current values are removed by exact negation (a two-term
+        ``x + (−x)`` cancels in any summation order), then the recorded
+        originals are re-added onto the now-empty keys (single-term
+        sums, again exact) — a one-pass ``x − x + orig`` merge would be
+        at the mercy of the reducer's association.  Entries outside the
+        touched key set are never edited, so the restoration is exact as
+        long as they were left alone in between (edit the same pairs
+        again and the snapshot is stale — rejoin first, or rebuild).
+        """
+        n = self.n_devices
+        ds, dd, _ = self.delta
+        keys = np.unique(ds * n + dd)
+        rows, cols, vals = tm_now.rows(), tm_now.indices, tm_now.data
+        hit = np.isin(rows * n + cols, keys)
+        cleared = tm_now.apply_delta(rows[hit], cols[hit], -vals[hit])
+        return cleared.apply_delta(*self.orig)
+
+
+def evacuate_devices(
+    tb: RoutingTable,
+    wg: np.ndarray,
+    dead,
+    *,
+    hosts=None,
+) -> Evacuation:
+    """Evacuate several dead devices in one recorded batch.
+
+    Devices are processed in the given order against a *running* copy of
+    the traffic matrix, so a later evacuation sees flows the earlier
+    ones re-keyed (two dead devices that talked to each other end up as
+    a single host↔host flow, not a dangling edge).  Hosts are chosen as
+    the least-loaded surviving member of each dead device's group,
+    never another dead device.  Feed ``.delta`` plus ``dead=ev.dead``
+    to :func:`replan`; keep the :class:`Evacuation` to
+    :func:`rejoin_devices` later.
     """
     if not isinstance(tb.device_traffic, TrafficMatrix):
-        raise ValueError("evacuate_device needs the sparse TrafficMatrix path")
-    tm: TrafficMatrix = tb.device_traffic
+        raise ValueError("evacuate_devices needs the sparse TrafficMatrix path")
+    dead = np.asarray(list(dead), dtype=np.int64).ravel()
+    if dead.size == 0:
+        raise ValueError("no devices to evacuate")
+    if np.unique(dead).size != dead.size:
+        raise ValueError("duplicate device in the evacuation batch")
+    if hosts is not None:
+        hosts = np.asarray(list(hosts), dtype=np.int64).ravel()
+        if hosts.shape != dead.shape:
+            raise ValueError("hosts must pair 1:1 with dead devices")
     wg = np.asarray(wg, dtype=np.float64)
-    dead = int(dead)
-    if host is None:
-        members = tb.members(int(tb.group_of[dead]))
-        members = members[members != dead]
-        if members.size == 0:
-            raise ValueError(
-                f"group {int(tb.group_of[dead])} has no surviving member to "
-                f"host device {dead}'s load"
-            )
-        host = int(members[np.argmin(wg[members])])
-    host = int(host)
-    if host == dead:
-        raise ValueError("host must differ from the dead device")
-    rows, cols, vals = tm.rows(), tm.indices, tm.data
-    out_m = rows == dead
-    in_m = cols == dead
-    n_out, n_in = int(out_m.sum()), int(in_m.sum())
-    # remove each entry exactly (negating its stored volume), re-add it
-    # keyed to the host
-    d_src = np.concatenate(
-        [rows[out_m], np.full(n_out, host, np.int64), rows[in_m], rows[in_m]]
+    dead_set = set(int(d) for d in dead)
+    tm0: TrafficMatrix = tb.device_traffic
+    tm = tm0
+    wg_cur = wg.copy()
+    host_out = np.empty(dead.size, dtype=np.int64)
+    parts_s: list[np.ndarray] = []
+    parts_d: list[np.ndarray] = []
+    parts_v: list[np.ndarray] = []
+    for i, d in enumerate(int(x) for x in dead):
+        if hosts is None:
+            members = tb.members(int(tb.group_of[d]))
+            members = members[
+                [m not in dead_set for m in members.tolist()]
+            ]
+            if members.size == 0:
+                raise ValueError(
+                    f"group {int(tb.group_of[d])} has no surviving member "
+                    f"to host device {d}'s load"
+                )
+            host = int(members[np.argmin(wg_cur[members])])
+        else:
+            host = int(hosts[i])
+            if host == d:
+                raise ValueError("host must differ from the dead device")
+            if host in dead_set:
+                raise ValueError(f"host {host} is itself being evacuated")
+        if host == d:
+            raise ValueError("host must differ from the dead device")
+        d_src, d_dst, d_val = _rekey_triplets(tm, d, host)
+        tm = tm.apply_delta(d_src, d_dst, d_val)
+        parts_s.append(d_src)
+        parts_d.append(d_dst)
+        parts_v.append(d_val)
+        wg_cur[host] += wg_cur[d]
+        wg_cur[d] = 0.0
+        host_out[i] = host
+    delta = (
+        np.concatenate(parts_s),
+        np.concatenate(parts_d),
+        np.concatenate(parts_v),
     )
-    d_dst = np.concatenate(
-        [cols[out_m], cols[out_m], cols[in_m], np.full(n_in, host, np.int64)]
+    # snapshot the pre-failure values of every key the batch touches —
+    # the bit-exact restoration source for rejoin_devices
+    n = tm0.n_devices
+    keys = np.unique(delta[0] * n + delta[1])
+    rows0, cols0, vals0 = tm0.rows(), tm0.indices, tm0.data
+    hit0 = np.isin(rows0 * n + cols0, keys)
+    return Evacuation(
+        delta=delta,
+        dead=dead.copy(),
+        hosts=host_out,
+        wg_before=wg.copy(),
+        wg_after=wg_cur,
+        orig=(rows0[hit0].copy(), cols0[hit0].copy(), vals0[hit0].copy()),
+        n_devices=n,
     )
-    d_val = np.concatenate(
-        [-vals[out_m], vals[out_m], -vals[in_m], vals[in_m]]
+
+
+def rejoin_devices(
+    tb: RoutingTable,
+    evac: Evacuation,
+    *,
+    balance_slack: float = 0.05,
+    sweeps: int = 2,
+) -> ReplanResult:
+    """Re-join previously evacuated devices — the inverse of
+    :func:`evacuate_devices`.
+
+    Applies the recorded evacuation's exact inverse delta (flows move
+    back from the hosts onto the repaired devices, host-internalized
+    pairs reappear) and restores the recorded weights, then runs the
+    ordinary incremental :func:`replan` with *no* device barred from
+    bridge duty — the repaired hardware is eligible again.  Because
+    the inverse re-writes the recorded pre-failure entries (rather than
+    negating float sums), the rejoined traffic matrix is bit-identical
+    to the pre-failure one; the table follows from it deterministically.
+    """
+    if not isinstance(tb.device_traffic, TrafficMatrix):
+        raise ValueError("rejoin_devices needs the sparse TrafficMatrix path")
+    tm_restored = evac.restore_matrix(tb.device_traffic)
+    ds, dd, _ = evac.delta
+    touched_dev = np.unique(np.concatenate([ds, dd, evac.dead, evac.hosts]))
+    return _replan_core(
+        tb,
+        evac.wg_before,
+        tm_restored,
+        touched_dev,
+        np.empty(0, dtype=np.int64),
+        balance_slack=balance_slack,
+        sweeps=sweeps,
     )
-    wg_new = wg.copy()
-    wg_new[host] += wg_new[dead]
-    wg_new[dead] = 0.0
-    return (d_src, d_dst, d_val), wg_new, host

@@ -23,7 +23,7 @@ from repro.netsim.adapters import (
     total_bytes,
 )
 from repro.netsim.events import Delivery, EventQueue, Message
-from repro.netsim.simulate import SimResult, simulate
+from repro.netsim.simulate import LinkOutage, SimResult, simulate
 from repro.netsim.topology import (
     DEFAULT_ALPHA,
     DEFAULT_LINK_BW,
@@ -44,6 +44,7 @@ __all__ = [
     "EventQueue",
     "SimResult",
     "simulate",
+    "LinkOutage",
     "Link",
     "Topology",
     "single_switch",

@@ -33,7 +33,64 @@ import numpy as np
 from repro.netsim.events import Delivery, EventQueue, Message
 from repro.netsim.topology import Topology
 
-__all__ = ["SimResult", "simulate"]
+__all__ = ["LinkOutage", "SimResult", "simulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkOutage:
+    """One link-down window: ``link`` carries nothing in
+    ``[t_down, t_up)`` (absolute simulation seconds).
+
+    A transmission cannot *begin* inside the window; one already in
+    flight at ``t_down`` drains (store-and-forward switches buffer the
+    frame).  Messages whose first hop finds any path link down reroute
+    over the topology's precomputed backup route when one exists
+    (:meth:`~repro.netsim.topology.Topology.route_avoiding`) and stall
+    until ``t_up`` otherwise — conservation holds either way.
+    """
+
+    link: int
+    t_down: float
+    t_up: float
+
+    def __post_init__(self):
+        if not (0.0 <= self.t_down < self.t_up):
+            raise ValueError(
+                f"outage window [{self.t_down}, {self.t_up}) is empty"
+            )
+
+
+def _down_windows(outages, n_links) -> dict[int, list[tuple[float, float]]]:
+    """Per-link sorted down windows (overlaps merged)."""
+    by_link: dict[int, list[tuple[float, float]]] = {}
+    for o in outages:
+        if not (0 <= o.link < n_links):
+            raise ValueError(f"outage on unknown link {o.link}")
+        by_link.setdefault(o.link, []).append((float(o.t_down), float(o.t_up)))
+    for lid, win in by_link.items():
+        win.sort()
+        merged = [win[0]]
+        for lo, hi in win[1:]:
+            if lo <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], hi))
+            else:
+                merged.append((lo, hi))
+        by_link[lid] = merged
+    return by_link
+
+
+def _is_down(windows, t: float) -> bool:
+    return windows is not None and any(lo <= t < hi for lo, hi in windows)
+
+
+def _clear_of(windows, t: float) -> float:
+    """Earliest time ≥ t outside every down window."""
+    if windows is None:
+        return t
+    for lo, hi in windows:  # sorted; t only moves forward
+        if lo <= t < hi:
+            t = hi
+    return t
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +114,13 @@ class SimResult:
       topology: the topology simulated (for link-kind reports).
       deliveries: per-message :class:`Delivery` records when
         ``collect_events=True`` (else empty).
+      n_rerouted: messages that switched to a backup route because a
+        primary-path link was down at injection.
+      outage_stall_s: total seconds transmissions waited specifically
+        for a down window to end (congestion waits excluded).
+      link_down_s: ``float64[n_links]`` seconds each link was down
+        within the simulated horizon (``None`` on results built before
+        outages existed — treated as all-up).
     """
 
     t_total: float
@@ -72,6 +136,9 @@ class SimResult:
     queue_popped: int
     topology: Topology
     deliveries: tuple[Delivery, ...] = ()
+    n_rerouted: int = 0
+    outage_stall_s: float = 0.0
+    link_down_s: np.ndarray | None = None
 
     @property
     def round_makespans(self) -> tuple[float, ...]:
@@ -106,10 +173,28 @@ class SimResult:
 
     def worst_device(self) -> int:
         """Device whose egress links were busiest — the straggler the
-        closed-form model's per-device max corresponds to."""
+        closed-form model's per-device max corresponds to.
+
+        Busy time is normalized by each link's *availability*: a link
+        down for part of the run is scored on the time it could actually
+        transmit (``busy · t_total / (t_total − down_s)``), so an outage
+        neither hides a genuinely hot NIC nor lets a mostly-down link's
+        low raw busy time misattribute the straggler.  With no outages
+        the factor is 1 and the ranking is the historical busiest-egress.
+        """
         egress = self.topology.device_egress_links()
-        busy = [float(sum(self.link_busy_s[l] for l in ls)) for ls in egress]
-        return int(np.argmax(busy))
+        down = self.link_down_s
+        scores = []
+        for ls in egress:
+            s = 0.0
+            for l in ls:
+                busy = float(self.link_busy_s[l])
+                if down is not None and self.t_total > 0 and busy > 0:
+                    avail = self.t_total - float(down[l])
+                    busy *= self.t_total / max(avail, 1e-12)
+                s += busy
+            scores.append(s)
+        return int(np.argmax(scores))
 
     def assert_conserved(self) -> None:
         """Every injected message delivered exactly once, no queue leaks."""
@@ -137,6 +222,7 @@ def simulate(
     barriers: bool = False,
     collect_events: bool = False,
     t0: float = 0.0,
+    outages: Sequence[LinkOutage] = (),
 ) -> SimResult:
     """Replay ``rounds`` of messages over ``topo``.
 
@@ -159,6 +245,13 @@ def simulate(
         (Algorithm-2 forwarding: bridges aggregate only after level-1
         delivers).
       collect_events: keep a :class:`Delivery` record per message.
+      outages: :class:`LinkOutage` down windows.  A transmission never
+        *starts* inside a window (in-flight frames drain); a message
+        whose first hop finds a path link down switches to the
+        topology's backup route when one avoids every currently-down
+        link (``n_rerouted`` counts these) and otherwise stalls until
+        the window ends (``outage_stall_s`` accumulates the waiting).
+        Conservation is unaffected either way.
 
     Returns:
       :class:`SimResult`; call ``assert_conserved()`` to audit it.
@@ -175,6 +268,9 @@ def simulate(
     n_inj = n_del = 0
     bytes_inj = bytes_del = 0
     t_round = float(t0)
+    win = _down_windows(outages, n_links)
+    n_rerouted = 0
+    outage_stall = 0.0
 
     if barriers:
         batches = [[(ri, m) for m in rnd] for ri, rnd in enumerate(rounds)]
@@ -201,12 +297,25 @@ def simulate(
             t, payload = q.pop()
             mi, hop = payload
             (ri, m), path = batch[mi], paths[mi]
+            if win and hop == 0 and any(_is_down(win.get(l), t) for l in path):
+                # first hop met an outage: take the precomputed backup
+                # route when one dodges every currently-down link, else
+                # keep the primary and stall below
+                down_now = frozenset(l for l in win if _is_down(win[l], t))
+                alt = topo.route_avoiding(m.src, m.dst, down_now)
+                if alt is not None and tuple(alt) != tuple(path):
+                    paths[mi] = path = tuple(alt)
+                    n_rerouted += 1
             lid = path[hop]
             lnk = topo.links[lid]
             dur = lnk.alpha + m.nbytes * lnk.beta
             if hop == 0:
                 dur += alpha_msg
             start = t if t >= free[lid] else free[lid]
+            if win:
+                up = _clear_of(win.get(lid), start)
+                outage_stall += up - start
+                start = up
             waits[mi] += start - t
             end = start + dur
             free[lid] = end
@@ -238,6 +347,12 @@ def simulate(
                     )
         t_round = t_end  # with barriers: next round starts after the slowest
 
+    down_s = np.zeros(n_links)
+    for lid, windows in win.items():
+        down_s[lid] = sum(
+            max(0.0, min(hi, t_round) - max(lo, float(t0)))
+            for lo, hi in windows
+        )
     return SimResult(
         t_total=(t_round - t0) if n_rounds else 0.0,
         round_ends=tuple(float(e) for e in round_ends),
@@ -252,4 +367,7 @@ def simulate(
         queue_popped=q.popped,
         topology=topo,
         deliveries=tuple(deliveries),
+        n_rerouted=n_rerouted,
+        outage_stall_s=outage_stall,
+        link_down_s=down_s,
     )

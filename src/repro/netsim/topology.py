@@ -130,6 +130,51 @@ class Topology:
             return tuple(p["ccw"][(src - k) % n] for k in range(n - fwd))
         raise ValueError(f"unknown topology kind {self.kind!r}")
 
+    def route_avoiding(
+        self, src: int, dst: int, avoid
+    ) -> tuple[int, ...] | None:
+        """The precomputed backup route for ``src → dst`` that skips the
+        ``avoid`` link ids (a downed-link set), or ``None`` when every
+        route is blocked.
+
+        The primary :meth:`route` is returned unchanged when it is
+        already disjoint from ``avoid``.  Alternatives exist exactly
+        where the fabric has path diversity: a :func:`fat_tree` cross-pod
+        pair can re-hash onto any surviving spine, a :func:`ring` pair
+        can take the other arc; :func:`single_switch`, :func:`two_tier`,
+        and intra-pod pairs have a single physical path, so a downed
+        link there means *stall until up* (the simulator's fallback).
+        """
+        avoid = frozenset(avoid)
+        primary = self.route(src, dst)
+        if not avoid.intersection(primary):
+            return primary
+        p = self.params
+        if self.kind == "fat_tree":
+            ps, pd = src // p["pod_size"], dst // p["pod_size"]
+            if ps != pd:
+                s0 = (src + dst) % p["n_spines"]
+                for k in range(1, p["n_spines"]):
+                    s = (s0 + k) % p["n_spines"]
+                    alt = (
+                        p["up"][src],
+                        p["leaf_up"][ps][s],
+                        p["leaf_down"][pd][s],
+                        p["down"][dst],
+                    )
+                    if not avoid.intersection(alt):
+                        return alt
+            return None
+        if self.kind == "ring":
+            n = self.n_devices
+            fwd = (dst - src) % n
+            if fwd <= n - fwd:  # primary was clockwise: try the other arc
+                alt = tuple(p["ccw"][(src - k) % n] for k in range(n - fwd))
+            else:
+                alt = tuple(p["cw"][(src + k) % n] for k in range(fwd))
+            return alt if not avoid.intersection(alt) else None
+        return None  # single_switch / two_tier: one physical path
+
     def device_egress_links(self) -> list[tuple[int, ...]]:
         """Per device, the link ids on which its messages *depart* —
         the NIC serialization points the latency model's per-device

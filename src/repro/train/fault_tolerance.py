@@ -1,27 +1,43 @@
-"""Fault-tolerant training supervisor: checkpoint/restart, failure
-detection, straggler deadlines, elastic remesh.
+"""Fault-tolerant training supervisor: a tiered recovery ladder over
+checkpoint/restart, plus straggler deadlines and elastic remesh.
 
 The supervisor wraps the jit'd train step in a loop that would run on
-the coordinator of a 1000+-node job.  Failure modes handled:
+the coordinator of a 1000+-node job.  A failed step climbs the ladder
+one rung at a time — each rung is strictly cheaper than the next:
 
-* **NaN/Inf loss or gradients** — roll back to the last checkpoint and
-  skip the offending data step (deterministic pipeline ⇒ skipping is
-  reproducible).
-* **Step failure** (device error, preemption — injected in tests via
-  ``failure_hook``) — restore from the last checkpoint and continue;
-  repeated failures at the same step abort with a diagnostic.
-* **Stragglers** — a per-step wall-clock deadline (p99-based EWMA); a
-  step exceeding it is *recorded* (on real multi-host the coordinator
-  would re-slice the mesh; on CPU we log and continue — interface, not
-  simulation theater).
-* **Elastic remesh** — ``resume(mesh')`` restores the newest checkpoint
-  under a different mesh (grow/shrink the data axis) using checkpoint
-  resharding; the step function is rebuilt for the new topology.
+1. **Classify** (:func:`classify_failure`) — *transient* (NaN loss,
+   preemption, a flaky step) vs *fatal* (a :class:`DeviceFailure` whose
+   hardware is gone for good).
+2. **Backoff** (:func:`backoff_delay`) — exponential with deterministic
+   jitter (seeded by ``(seed, step, attempt)``, so two supervisors with
+   the same config never thundering-herd *and* replays are bit-
+   reproducible).  Default base is 0 s: tests and CI pay nothing.
+3. **Rollback** — restore the newest *intact* checkpoint
+   (:func:`repro.train.checkpoint.latest_step` with ``intact_only``,
+   checksum-verified) and replay; the deterministic data pipeline makes
+   the replayed trajectory bit-equal to a failure-free run.
+4. **Evacuate + replan** — fatal failures hand every dead device to the
+   communication layer in one batch (``evacuate_hook``; see
+   :func:`repro.core.replan.evacuate_devices` →
+   :class:`repro.snn.distributed.PlanBuffer`), so the exchange plan
+   routes around the loss while training retries from the checkpoint.
+5. **Degraded mode** — when the evacuate hook reports the shrunken
+   group cannot absorb the load, the supervisor marks itself degraded
+   (``allow_degraded``) and keeps stepping on the survivors instead of
+   aborting the job; re-join (:func:`repro.core.replan.rejoin_devices`)
+   is the exit path once hardware returns.
+
+Stragglers get a per-step wall-clock deadline (EWMA-based): a step
+exceeding it is *recorded* (on real multi-host the coordinator would
+re-slice the mesh; on CPU we log and continue — interface, not
+simulation theater).  ``resume_with`` restores the newest intact
+checkpoint under a different mesh (grow/shrink the data axis).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 from collections.abc import Callable
 from typing import Any
 
@@ -29,23 +45,82 @@ import numpy as np
 
 from repro.train import checkpoint as ckpt_mod
 
-__all__ = ["SupervisorConfig", "Supervisor", "StepResult", "DeviceFailure"]
+__all__ = [
+    "SupervisorConfig",
+    "Supervisor",
+    "StepResult",
+    "DeviceFailure",
+    "classify_failure",
+    "backoff_delay",
+]
 
 
 class DeviceFailure(RuntimeError):
-    """A step failure attributable to a specific dead device.
+    """A step failure attributable to specific dead device(s).
 
     Raised by device health monitors (injected via ``failure_hook`` in
-    tests).  The supervisor reports ``device`` to its ``replan_hook``
-    before rolling back, so the communication layer can evacuate the
-    device and swap in an incrementally replanned exchange
-    (:mod:`repro.core.replan` → :class:`repro.snn.distributed.PlanBuffer`)
-    while training retries from the last checkpoint.
+    tests and chaos runs — :func:`repro.chaos.supervisor_hook`).  The
+    supervisor reports the devices to its replan/evacuate hooks before
+    rolling back, so the communication layer can evacuate them and swap
+    in an incrementally replanned exchange (:mod:`repro.core.replan` →
+    :class:`repro.snn.distributed.PlanBuffer`) while training retries
+    from the last checkpoint.
+
+    ``device`` (the first casualty) is kept for single-device callers;
+    ``devices`` carries the whole batch.  ``fatal=False`` marks a
+    transient hiccup (the device will come back) — the ladder stops at
+    rollback for those.
     """
 
-    def __init__(self, device: int, message: str | None = None):
-        super().__init__(message or f"device {device} failed")
-        self.device = int(device)
+    def __init__(
+        self,
+        device: int | None = None,
+        message: str | None = None,
+        *,
+        devices: tuple[int, ...] | None = None,
+        fatal: bool = True,
+    ):
+        if devices is None:
+            if device is None:
+                raise ValueError("DeviceFailure needs device or devices")
+            devices = (int(device),)
+        else:
+            devices = tuple(int(d) for d in devices)
+            if not devices:
+                raise ValueError("devices must be non-empty")
+        super().__init__(
+            message or f"device(s) {', '.join(map(str, devices))} failed"
+        )
+        self.devices = devices
+        self.device = devices[0]
+        self.fatal = bool(fatal)
+
+
+def classify_failure(err: BaseException) -> str:
+    """Ladder rung 1: ``'fatal'`` (hardware permanently gone — escalate
+    to evacuate+replan) or ``'transient'`` (backoff + rollback suffice).
+    Only a :class:`DeviceFailure` marked fatal is fatal; NaN losses,
+    preemptions, and unknown step errors are transient by default."""
+    if isinstance(err, DeviceFailure):
+        return "fatal" if err.fatal else "transient"
+    return "transient"
+
+
+def backoff_delay(cfg: "SupervisorConfig", step: int, attempt: int) -> float:
+    """Ladder rung 2: exponential backoff with deterministic jitter.
+
+    ``base · factor^attempt · (1 + jitter · u)`` with ``u ∈ [-1, 1)``
+    drawn from ``crc32((seed, step, attempt))`` — same config, same
+    failure, same delay, bit-reproducibly, while distinct seeds
+    decorrelate (no thundering herd on a shared fabric).
+    """
+    if cfg.backoff_base_s <= 0.0:
+        return 0.0
+    u = (
+        zlib.crc32(f"{cfg.seed}:{step}:{attempt}".encode()) / 0xFFFFFFFF
+    ) * 2.0 - 1.0
+    delay = cfg.backoff_base_s * cfg.backoff_factor**attempt
+    return min(delay * (1.0 + cfg.backoff_jitter * u), cfg.backoff_max_s)
 
 
 @dataclasses.dataclass
@@ -55,6 +130,14 @@ class SupervisorConfig:
     max_retries_per_step: int = 3
     deadline_factor: float = 3.0  # straggler: step > factor × EWMA
     ewma_alpha: float = 0.1
+    # recovery-ladder knobs (PR 9): backoff_base_s = 0 disables sleeping
+    # entirely, so unit tests and CI never pay wall-clock for chaos runs
+    backoff_base_s: float = 0.0
+    backoff_factor: float = 2.0
+    backoff_jitter: float = 0.1
+    backoff_max_s: float = 30.0
+    seed: int = 0
+    allow_degraded: bool = True
 
 
 @dataclasses.dataclass
@@ -62,7 +145,9 @@ class StepResult:
     """One completed step.  ``wall_time`` is cumulative across every
     attempt (rollback/retry cost included — historically only the final
     attempt was timed, hiding retries from the straggler EWMA);
-    ``retries`` counts the failed attempts before success."""
+    ``retries`` counts the failed attempts before success; ``degraded``
+    marks steps run on a shrunken group after an evacuate+replan could
+    not absorb a fatal loss."""
 
     step: int
     loss: float
@@ -70,6 +155,7 @@ class StepResult:
     restarted: bool = False
     straggler: bool = False
     retries: int = 0
+    degraded: bool = False
 
 
 class Supervisor:
@@ -81,26 +167,37 @@ class Supervisor:
         params: Any,
         opt_state: Any,
         data_iter: Any,
-        cfg: SupervisorConfig = SupervisorConfig(),
+        cfg: SupervisorConfig | None = None,
         *,
         failure_hook: Callable[[int], None] | None = None,
         replan_hook: Callable[[int], None] | None = None,
+        evacuate_hook: Callable[[tuple[int, ...]], bool] | None = None,
+        sleep: Callable[[float], None] = time.sleep,
     ):
         self.train_step = train_step
         self.params = params
         self.opt_state = opt_state
         self.data_iter = data_iter
-        self.cfg = cfg
+        # a default-argument SupervisorConfig() would be evaluated once
+        # and shared (mutably) by every supervisor in the process
+        self.cfg = cfg if cfg is not None else SupervisorConfig()
         self.failure_hook = failure_hook
-        # called with the dead device id when a DeviceFailure is caught,
-        # before rollback — the communication layer's evacuate-and-replan
-        # entry point (see repro.core.replan)
+        # called with the (first) dead device id when a DeviceFailure is
+        # caught, before rollback — the single-device replan entry point
+        # kept for existing callers (see repro.core.replan)
         self.replan_hook = replan_hook
-        self.checkpointer = ckpt_mod.Checkpointer(cfg.ckpt_dir)
+        # batched ladder rung: called once per fatal failure with the
+        # whole casualty tuple; returns truthy when evacuate+replan
+        # absorbed the loss, falsy to drop into degraded mode
+        self.evacuate_hook = evacuate_hook
+        self._sleep = sleep
+        self.checkpointer = ckpt_mod.Checkpointer(self.cfg.ckpt_dir)
         self.step = 0
         self._ewma: float | None = None
         self.history: list[StepResult] = []
         self._last_ckpt_step: int | None = None
+        self.dead: list[int] = []
+        self.degraded = False
 
     # -- checkpointing -------------------------------------------------
     def _maybe_checkpoint(self):
@@ -112,7 +209,10 @@ class Supervisor:
 
     def _rollback(self) -> bool:
         self.checkpointer.wait()
-        latest = ckpt_mod.latest_step(self.cfg.ckpt_dir)
+        # newest *intact* checkpoint: a corrupt latest (torn write,
+        # bit-rot) fails its manifest checksums and the scan falls back
+        # to the newest one that verifies
+        latest = ckpt_mod.latest_step(self.cfg.ckpt_dir, intact_only=True)
         if latest is None:
             return False
         self.params, self.opt_state, manifest = ckpt_mod.restore(
@@ -152,8 +252,24 @@ class Supervisor:
                     retries += 1
                     if attempt >= self.cfg.max_retries_per_step:
                         raise
-                    if isinstance(err, DeviceFailure) and self.replan_hook:
-                        self.replan_hook(err.device)
+                    # the recovery ladder: classify → backoff → (fatal
+                    # only) evacuate+replan → rollback; degraded mode if
+                    # the shrunken group cannot absorb the loss
+                    kind = classify_failure(err)
+                    delay = backoff_delay(self.cfg, self.step, attempt)
+                    if delay > 0:
+                        self._sleep(delay)
+                    if isinstance(err, DeviceFailure) and kind == "fatal":
+                        self.dead.extend(
+                            d for d in err.devices if d not in self.dead
+                        )
+                        if self.replan_hook:
+                            self.replan_hook(err.device)
+                        if self.evacuate_hook:
+                            if not self.evacuate_hook(err.devices):
+                                if not self.cfg.allow_degraded:
+                                    raise
+                                self.degraded = True
                     if not self._rollback():
                         # no checkpoint yet: retry with fresh state
                         continue
@@ -173,6 +289,7 @@ class Supervisor:
                     restarted=restarted,
                     straggler=straggler,
                     retries=retries,
+                    degraded=self.degraded,
                 )
             )
             self._maybe_checkpoint()
@@ -184,7 +301,7 @@ class Supervisor:
         """Restore the newest checkpoint into (possibly re-sharded)
         structures for a new mesh; returns (params, opt_state, step)."""
         self.checkpointer.wait()
-        latest = ckpt_mod.latest_step(self.cfg.ckpt_dir)
+        latest = ckpt_mod.latest_step(self.cfg.ckpt_dir, intact_only=True)
         if latest is None:
             raise RuntimeError("no checkpoint to resume from")
         params, opt_state, manifest = ckpt_mod.restore(

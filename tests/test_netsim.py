@@ -372,3 +372,118 @@ class TestWhatIf:
         wide = netsim.payload_sharding_whatif(plan, topos, alpha_msg=2e-6, byte_scale=65536.0)
         assert wide["fat_tree"]["speedup"] > narrow["fat_tree"]["speedup"]
         assert wide["fat_tree"]["speedup"] > 1.0
+
+
+class TestOutages:
+    """Link-outage windows: stall vs reroute, conservation, blame."""
+
+    def test_window_validation(self):
+        with pytest.raises(ValueError, match="is empty"):
+            netsim.LinkOutage(link=0, t_down=2e-6, t_up=1e-6)
+        topo = netsim.single_switch(2)
+        with pytest.raises(ValueError, match="unknown link"):
+            netsim.simulate(
+                [[netsim.Message(0, 1, 8)]],
+                topo,
+                outages=[netsim.LinkOutage(link=999, t_down=0.0, t_up=1e-6)],
+            )
+
+    def test_stall_when_no_backup_route(self):
+        """single_switch has no redundancy: a downed NIC uplink stalls
+        the transmission until t_up, exactly accounted, conserved."""
+        topo = netsim.single_switch(2)
+        up0 = topo.params["up"][0]
+        msg = [[netsim.Message(0, 1, 64)]]
+        base = netsim.simulate(msg, topo)
+        t_up = 5e-5
+        res = netsim.simulate(
+            msg, topo, outages=[netsim.LinkOutage(link=up0, t_down=0.0, t_up=t_up)]
+        )
+        res.assert_conserved()
+        assert res.n_rerouted == 0
+        assert res.outage_stall_s == pytest.approx(t_up)
+        assert res.t_total == pytest.approx(base.t_total + t_up)
+        assert res.link_down_s[up0] == pytest.approx(t_up)
+
+    def test_reroute_via_backup_spine(self):
+        """fat_tree reroutes a cross-pod message around a downed uplink
+        at injection: no stall, same latency (equal-cost backup), and
+        the alternate spine's links carry the bytes."""
+        topo = netsim.fat_tree(8, 2)
+        src, dst = 0, 6  # cross-pod
+        primary = topo.route(src, dst)
+        leaf_up = primary[1]
+        msg = [[netsim.Message(src, dst, 64)]]
+        base = netsim.simulate(msg, topo)
+        res = netsim.simulate(
+            msg,
+            topo,
+            outages=[netsim.LinkOutage(link=leaf_up, t_down=0.0, t_up=1e-3)],
+        )
+        res.assert_conserved()
+        assert res.n_rerouted == 1
+        assert res.outage_stall_s == 0.0
+        assert res.t_total == pytest.approx(base.t_total)
+        assert res.link_bytes[leaf_up] == 0.0
+        alt = topo.route_avoiding(src, dst, {leaf_up})
+        assert alt is not None and leaf_up not in alt
+        assert all(res.link_bytes[l] > 0 for l in alt)
+
+    def test_in_flight_frame_drains(self):
+        """A transmission that began before t_down completes — the
+        window only blocks transmissions from *starting*."""
+        topo = netsim.single_switch(2)
+        up0 = topo.params["up"][0]
+        lnk = topo.links[up0]
+        mid = (lnk.alpha + 64 * lnk.beta) / 2  # window opens mid-frame
+        msg = [[netsim.Message(0, 1, 64)]]
+        base = netsim.simulate(msg, topo)
+        res = netsim.simulate(
+            msg,
+            topo,
+            outages=[netsim.LinkOutage(link=up0, t_down=mid, t_up=1.0)],
+        )
+        assert res.t_total == pytest.approx(base.t_total)
+        assert res.outage_stall_s == 0.0
+
+    def test_route_avoiding_per_kind(self):
+        ss = netsim.single_switch(4)
+        assert ss.route_avoiding(0, 1, {ss.route(0, 1)[0]}) is None
+        rg = netsim.ring(6)
+        other = rg.route_avoiding(0, 2, {rg.route(0, 2)[0]})
+        assert other is not None
+        assert rg.links[other[-1]].dst == 2  # reaches dst on the far arc
+        ft = netsim.fat_tree(8, 2)
+        pri = ft.route(0, 6)
+        alt = ft.route_avoiding(0, 6, {pri[1]})
+        assert alt is not None and pri[1] not in alt
+        assert alt[0] == pri[0] and alt[-1] == pri[-1]  # same NICs
+        # intra-pod routes never cross a spine: nothing to avoid with
+        assert ft.route_avoiding(0, 1, {ft.route(0, 1)[0]}) is None
+        # a route already clear of the avoid set is returned unchanged
+        assert ft.route_avoiding(0, 6, {9999}) == pri
+
+    def test_worst_device_availability_normalization(self):
+        """Blame is busy-per-available-second: a device whose NIC was
+        down most of the horizon but saturated while up outranks an
+        equally-busy always-up device; with ``link_down_s=None``
+        (results built before outages existed) the historical raw
+        ranking is preserved."""
+        import dataclasses as _dc
+
+        topo = netsim.single_switch(3)
+        up = topo.params["up"]
+        # devices 0 and 1 send identical bytes to 2; device 1's NIC is
+        # down for a long window first, so both raw busy times are equal
+        # but device 1 had far less available time
+        msgs = [[netsim.Message(0, 2, 512), netsim.Message(1, 2, 512)]]
+        down = 5e-4
+        res = netsim.simulate(
+            msgs,
+            topo,
+            outages=[netsim.LinkOutage(link=up[1], t_down=0.0, t_up=down)],
+        )
+        assert res.link_busy_s[up[0]] == pytest.approx(res.link_busy_s[up[1]])
+        assert res.worst_device() == 1
+        legacy = _dc.replace(res, link_down_s=None)
+        assert legacy.worst_device() == 0  # raw tie → first index

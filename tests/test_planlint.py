@@ -435,3 +435,92 @@ print("COUNTS=" + json.dumps(out))
     assert counts["1d/ragged"] == {"ppermute": 31, "psum": 0, "all_gather": 0}
     assert counts["8x4/sparse"] == {"ppermute": 7, "psum": 0, "all_gather": 1}
     assert counts["8x4/ragged"] == {"ppermute": 7, "psum": 7, "all_gather": 1}
+
+
+# ---------------------------------------------------------------------------
+# PL170 / PL171 — fault-recovery isolation rules
+# ---------------------------------------------------------------------------
+
+
+def test_recovered_plan_silent_pl17x(good_table):
+    """A plan produced by the real recovery path (batched evacuate +
+    delta replan) must pass both fault rules — this is the clean half of
+    the mutation pair below."""
+    from repro.core.replan import evacuate_devices, replan
+
+    tb, _tm, wg = good_table
+    dead = [5, 17]
+    ev = evacuate_devices(tb, wg, dead)
+    res = replan(tb, ev.wg_after, ev.delta, dead=dead)
+    ctx = PlanContext.from_table(
+        res.table, name="recovered", wg=ev.wg_after, dead=dead
+    )
+    assert not {"PL170", "PL171"} & _ids(run_lints(ctx))
+
+
+def test_dead_device_in_bridge_row_pl170(good_table):
+    """Mutation: electing an evacuated device as a group bridge must
+    fire PL170 — at runtime that row would wait on a dead sender."""
+    from repro.core.replan import evacuate_devices, replan
+
+    tb, _tm, wg = good_table
+    dead = [5]
+    ev = evacuate_devices(tb, wg, dead)
+    res = replan(tb, ev.wg_after, ev.delta, dead=dead)
+    tb2 = res.table
+    bridge_bad = tb2.bridge.copy()
+    gs, gd = np.argwhere(bridge_bad >= 0)[0]
+    bridge_bad[gs, gd] = 5  # re-elect the evacuated device
+    ctx = PlanContext.from_table(
+        dataclasses.replace(tb2, bridge=bridge_bad), dead=dead
+    )
+    assert "PL170" in _ids(run_lints(ctx))
+
+
+def test_dead_device_in_traffic_csr_pl170(good_table):
+    """Mutation: traffic still booked on an evacuated device (evacuation
+    skipped / delta dropped) must fire PL170 with src+dst counts."""
+    tb, _tm, _wg = good_table
+    dead = [int(tb.bridge[tb.bridge >= 0].ravel()[0])]
+    ctx = PlanContext.from_table(tb, dead=dead)  # un-evacuated table
+    pl170 = [f for f in run_lints(ctx) if f.rule_id == "PL170"]
+    assert pl170
+    assert any("sent" in f.message and "received" in f.message for f in pl170)
+
+
+def test_downed_link_without_backup_pl171():
+    """Mutation: a scheduled pair whose only route crosses a downed link
+    (single_switch has no alternate path) must fire PL171."""
+    from repro.netsim.topology import single_switch
+
+    topo = single_switch(8)
+    up0 = int(topo.route(0, 1)[0])
+    ctx = PlanContext(
+        name="outage",
+        mesh_shape=(8, 1),
+        schedule=[[(0, 1)]],
+        topology=topo,
+        down_links=[up0],
+    )
+    assert "PL171" in _ids(run_lints(ctx))
+
+
+def test_downed_link_with_spine_backup_silent_pl171():
+    """A fat-tree pair crossing a downed spine uplink stays silent:
+    ``route_avoiding`` finds the alternate spine, so netsim replay will
+    reroute rather than stall."""
+    from repro.netsim.topology import fat_tree
+
+    topo = fat_tree(8, 2)
+    primary = topo.route(0, 6)
+    leaf_up = int(primary[1])  # leaf -> spine hop
+    ctx = PlanContext(
+        name="outage-backup",
+        mesh_shape=(8, 1),
+        schedule=[[(0, 6)]],
+        topology=topo,
+        down_links=[leaf_up],
+    )
+    findings = run_lints(ctx)
+    assert "PL171" not in _ids(findings)
+    assert topo.route_avoiding(0, 6, {leaf_up}) is not None

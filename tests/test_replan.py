@@ -435,3 +435,132 @@ for n_blocks, mesh_spec in [(8, ((8,), ("data",))), (32, ((8, 4), ("pod", "data"
 print("OK")
 """
         assert "OK" in run_devices(code, n_devices=32)
+
+
+class TestBatchEvacuation:
+    def test_batch_matches_sequential_singles(self):
+        """One batched call over [d0, d1] == evacuating d0 then d1 by
+        hand against the running matrix (delta is additive COO)."""
+        from repro.core import evacuate_devices
+
+        tb, tm, wg = _table()
+        bridges = np.unique(tb.bridge[tb.bridge >= 0].ravel())
+        dead = [int(bridges[0]), int(bridges[-1])]
+        ev = evacuate_devices(tb, wg, dead)
+        got = tm.apply_delta(*ev.delta)
+
+        d = tm.to_dense()
+        for dd, host in zip(ev.dead, ev.hosts):
+            d[host] += d[dd]
+            d[:, host] += d[:, dd]
+            d[dd], d[:, dd] = 0.0, 0.0
+            np.fill_diagonal(d, 0.0)
+        np.testing.assert_allclose(got.to_dense(), d, rtol=1e-12, atol=0)
+        assert np.all(ev.wg_after[ev.dead] == 0.0)
+        assert np.all(ev.wg_before == wg)
+
+    def test_dead_pair_flows_internalize_not_dangle(self):
+        """Two dead devices that talked to each other: the later
+        evacuation must see the re-keyed flow, so nothing still
+        references either dead key."""
+        from repro.core import evacuate_devices
+
+        tb, tm, wg = _table()
+        rows, cols = tm.rows(), tm.indices
+        i = int(np.argmax(tm.data))  # a stored pair, both ends dead
+        dead = [int(rows[i]), int(cols[i])]
+        ev = evacuate_devices(tb, wg, dead)
+        got = tm.apply_delta(*ev.delta)
+        assert not np.any(np.isin(got.rows(), dead))
+        assert not np.any(np.isin(got.indices, dead))
+        assert not np.any(np.isin(ev.hosts, dead))
+
+    def test_batch_replan_isolates_all_dead(self):
+        from repro.core import evacuate_devices
+
+        tb, _tm, wg = _table()
+        dead = [3, 17, 42]
+        ev = evacuate_devices(tb, wg, dead)
+        res = replan(tb, ev.wg_after, ev.delta, dead=dead)
+        res.table.validate()
+        tmd = res.table.device_traffic
+        assert not np.any(np.isin(tmd.rows(), dead))
+        assert not np.any(np.isin(tmd.indices, dead))
+        assert not np.any(np.isin(res.table.bridge, dead))
+
+    def test_validation_negatives(self):
+        from repro.core import evacuate_devices
+
+        tb, _tm, wg = _table()
+        with pytest.raises(ValueError, match="no devices"):
+            evacuate_devices(tb, wg, [])
+        with pytest.raises(ValueError, match="duplicate"):
+            evacuate_devices(tb, wg, [3, 3])
+        with pytest.raises(ValueError, match="1:1"):
+            evacuate_devices(tb, wg, [3, 4], hosts=[5])
+        with pytest.raises(ValueError, match="itself being evacuated"):
+            evacuate_devices(tb, wg, [3, 4], hosts=[4, 5])
+
+
+class TestRejoin:
+    def test_rejoin_restores_matrix_bit_exactly(self):
+        """evacuate → replan → rejoin: the rejoined traffic matrix is
+        BIT-identical to the pre-failure one (indptr, indices, data),
+        and the rejoined device weights equal the originals."""
+        from repro.core import evacuate_devices, rejoin_devices
+
+        tb, tm, wg = _table()
+        bridges = np.unique(tb.bridge[tb.bridge >= 0].ravel())
+        dead = [int(bridges[0]), int(bridges[-1])]
+        ev = evacuate_devices(tb, wg, dead)
+        res = replan(tb, ev.wg_after, ev.delta, dead=dead)
+
+        back = rejoin_devices(res.table, ev)
+        back.table.validate()
+        tmr = back.table.device_traffic
+        assert np.array_equal(tmr.indptr, tm.indptr)
+        assert np.array_equal(tmr.indices, tm.indices)
+        assert np.array_equal(tmr.data, tm.data)  # bit-equal, not close
+
+    def test_rejoin_restores_same_group_pair(self):
+        """The host-internalization edge case: dead and host share a
+        group, their mutual flow vanished during evacuation — rejoin
+        must resurrect it at the exact stored value."""
+        from repro.core import evacuate_devices, rejoin_devices
+
+        tb, tm, wg = _table()
+        # pick a stored intra-group pair and force its partner as host
+        rows, cols = tm.rows(), tm.indices
+        same = np.flatnonzero(tb.group_of[rows] == tb.group_of[cols])
+        i = int(same[0])
+        dead, host = int(rows[i]), int(cols[i])
+        ev = evacuate_devices(tb, wg, [dead], hosts=[host])
+        res = replan(tb, ev.wg_after, ev.delta, dead=[dead])
+        assert not np.any(np.isin(res.table.device_traffic.rows(), [dead]))
+
+        back = rejoin_devices(res.table, ev)
+        tmr = back.table.device_traffic
+        assert np.array_equal(tmr.indptr, tm.indptr)
+        assert np.array_equal(tmr.indices, tm.indices)
+        assert np.array_equal(tmr.data, tm.data)
+
+    def test_rejoined_device_eligible_for_bridge_duty(self):
+        """After rejoin no device is barred: the rejoined table's bridge
+        matrix may elect the repaired device again (it must at least be
+        a valid table with every flow routed)."""
+        from repro.core import evacuate_devices, rejoin_devices
+        from repro.core.routing import group_pair_traffic
+
+        tb, tm, wg = _table()
+        dead = int(tb.bridge[tb.bridge >= 0].ravel()[0])
+        ev = evacuate_devices(tb, wg, [dead])
+        res = replan(tb, ev.wg_after, ev.delta, dead=[dead])
+        back = rejoin_devices(res.table, ev)
+        back.table.validate()
+        # group-pair traffic equals the pre-failure table's exactly
+        np.testing.assert_allclose(
+            group_pair_traffic(back.table),
+            group_pair_traffic(tb),
+            rtol=1e-12,
+            atol=0,
+        )
