@@ -137,10 +137,18 @@ def _lif_run(schedule: FaultSchedule | None, ckpt_dir: str):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.parse_args(argv)
+    ap.add_argument("--trace", metavar="PATH",
+                    help="export the whole chaos run (supervisor events, "
+                         "replan spans, netsim transmissions) as one "
+                         "Chrome-trace JSON")
+    args = ap.parse_args(argv)
 
+    from repro import obs
     from repro.analysis import PlanContext, run_lints
     from repro.netsim import fat_tree, simulate, table_rounds
+
+    if args.trace:
+        obs.enable()
 
     graph, _ = planted_partition_graph(
         N, n_blocks=G, avg_degree=32, p_in_frac=0.9, seed=0
@@ -222,12 +230,25 @@ def main(argv=None):
     # -- netsim outage + straggler replay ------------------------------
     rounds = filter_dead_rounds(table_rounds(tb_rec, bytes_per_unit=64.0), dead)
     topo_slow = apply_stragglers(topo, sched)
-    sim = simulate(rounds, topo_slow, outages=link_outages(sched))
+    sim = simulate(rounds, topo_slow, outages=link_outages(sched),
+                   collect_hops=True)
     blamed = sim.worst_device()
+    att = obs.attribute_critical_path(sim)
     emit("fault/outage_rerouted", int(sim.n_rerouted > 0), "backup_spine_taken")
     emit("fault/outage_stall_us", round(sim.outage_stall_s * 1e6, 3), "wait_for_link_up")
     emit("fault/sim_latency_us", round(sim.t_total * 1e6, 3), "recovered_plan_replay")
     emit("fault/worst_device", blamed, "outage_normalized_blame")
+    emit("fault/attrib_conserved", int(att.conserved),
+         "outage-replay decomposition == t_total exactly [gated]")
+    kind, frac = att.dominant_kind()
+    emit("fault/critpath_dominant_kind", f"{kind}:{round(frac, 3)}",
+         "largest critical-path share (info)")
+
+    if args.trace:
+        obs.disable()
+        obs.write_chrome_trace(args.trace)
+        obs.clear()
+        print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -47,7 +47,7 @@ def _topologies(n_dev: int, pod: int):
 
 def _scenario(syn, mesh_shape, scn: str, *, gate_topos):
     """Replay flat/sparse/ragged for one mesh scenario on every fabric."""
-    from repro import netsim
+    from repro import netsim, obs
     from repro.snn import build_ragged_plan, exchange_volume
 
     g = int(mesh_shape[0])
@@ -73,16 +73,30 @@ def _scenario(syn, mesh_shape, scn: str, *, gate_topos):
     )
     pod = max(r, 2) if r > 1 else max(syn.n_blocks // 8, 2)
     lat: dict[tuple[str, str], float] = {}
+    conserved_all = True
     for tname, topo in _topologies(syn.n_blocks, pod).items():
         for sched, rnds in rounds.items():
-            res = netsim.simulate(rnds, topo, alpha_msg=TOPO_ALPHA_MSG)
+            res = netsim.simulate(
+                rnds, topo, alpha_msg=TOPO_ALPHA_MSG, collect_hops=True
+            )
             res.assert_conserved()
+            att = obs.attribute_critical_path(res)
+            conserved_all = conserved_all and att.conserved
             lat[(tname, sched)] = res.t_total
             emit(
                 f"netsim/{tname}_{scn}_{sched}_us",
                 round(res.t_total * 1e6, 3),
                 f"critical path, {topo.name}",
             )
+            if tname == "two_tier" and sched == "ragged":
+                # where the two-tier critical path goes, by link kind —
+                # deterministic simulation, so gated tightly
+                for kind, frac in sorted(att.kind_fractions().items()):
+                    emit(
+                        f"netsim/two_tier_{scn}_critfrac_{kind}",
+                        round(frac, 4),
+                        "critical-path share on this link kind [gated]",
+                    )
         gated = tname in gate_topos
         emit(
             f"netsim/{tname}_{scn}_flat_over_sparse",
@@ -94,6 +108,11 @@ def _scenario(syn, mesh_shape, scn: str, *, gate_topos):
             round(lat[(tname, "sparse")] / lat[(tname, "ragged")], 3),
             "simulated speedup (>1 = ragged wins)" + (" [gated]" if gated else ""),
         )
+    emit(
+        f"netsim/attrib_conserved_{scn}",
+        int(conserved_all),
+        "critical-path decomposition == t_total exactly, every fabric×schedule [gated]",
+    )
     return plan
 
 
@@ -115,6 +134,48 @@ def _whatif(plan):
                 round(row["speedup"], 3),
                 f"sharded-ragged vs ragged ({row['sharded_bytes']:.0f} B sharded)",
             )
+
+
+def _tracer_overhead(plan):
+    """Disabled-tracer overhead on a netsim replay — the ceiling gate.
+
+    The instrumentation a replay crosses while disabled is a handful of
+    ``span()`` calls (each one branch + a shared no-op) and one
+    ``is_enabled()`` check; the per-hop record branch tests a local
+    bool.  Measure the disabled ``span()`` cost directly and compare a
+    generous 10× the per-replay call count against 5% of the replay
+    wall — the margin is orders of magnitude, so the boolean is stable
+    on any CI machine.
+    """
+    import time
+
+    from repro import netsim, obs
+
+    g, r = plan.mesh_shape
+    topo = netsim.two_tier(g * r, r)
+    rounds = netsim.ragged_rounds(plan)
+    t_replay = min(
+        _timed(lambda: netsim.simulate(rounds, topo, alpha_msg=TOPO_ALPHA_MSG))
+        for _ in range(3)
+    )
+    n = 20_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        obs.span("overhead_probe")
+    per_call = (time.perf_counter() - t0) / n
+    overhead = 10 * per_call / t_replay
+    emit("obs/disabled_span_ns", round(per_call * 1e9, 1),
+         "disabled-path span() cost (info)")
+    emit("obs/tracer_overhead_ok", int(overhead < 0.05),
+         "10 disabled spans < 5% of a netsim replay [gated]")
+
+
+def _timed(fn):
+    import time
+
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def _table_replay(devices: int, populations: int, method: str):
@@ -193,9 +254,15 @@ def main(argv=None):
     ap.add_argument("--table-populations", type=int, default=6000)
     # accepted for benchmarks.run compatibility
     ap.add_argument("--method", default="greedy")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="export a Chrome-trace JSON of the replays")
     args, _ = ap.parse_known_args(argv)
 
+    from repro import obs
     from repro.snn import expand_synapses_sparse, generate_brain_model
+
+    if args.trace:
+        obs.enable()
 
     # short-range, community-structured connectivity: the regime a good
     # Algorithm-1 placement produces, where the group-pooled mask keeps
@@ -215,8 +282,18 @@ def main(argv=None):
     _scenario(syn, (args.devices,), "1d", gate_topos=gate)
     plan2 = _scenario(syn, (args.devices // 4, 4), f"{args.devices // 4}x4", gate_topos=gate)
     _whatif(plan2)
+    if args.trace:  # overhead probe measures the *disabled* path
+        obs.disable()
+    _tracer_overhead(plan2)
+    if args.trace:
+        obs.enable()
     if not args.reduced:
         _table_replay(args.table_devices, args.table_populations, args.method)
+    if args.trace:
+        obs.disable()
+        obs.write_chrome_trace(args.trace)
+        obs.clear()
+        print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

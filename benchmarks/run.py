@@ -31,6 +31,12 @@ def main(argv=None):
         help="partitioner for the proposed rows/lines",
     )
     ap.add_argument("--json", metavar="OUT", help="also write results as JSON")
+    ap.add_argument(
+        "--trace",
+        metavar="PATH",
+        help="forward Chrome-trace export to the tracing benches "
+        "(PATH stem gains .netsim / .fault suffixes)",
+    )
     args = ap.parse_args(argv)
 
     if args.full:
@@ -57,6 +63,12 @@ def main(argv=None):
     )
 
     exec_flag = ["--skip-exec"] if args.skip_exec else []
+    trace_netsim = trace_fault = []
+    if args.trace:
+        stem, ext = os.path.splitext(args.trace)
+        ext = ext or ".json"
+        trace_netsim = ["--trace", f"{stem}.netsim{ext}"]
+        trace_fault = ["--trace", f"{stem}.fault{ext}"]
     sections = [
         ("fig3a", fig3a_partition_traffic.main, size),
         ("fig3b", fig3b_routing_traffic.main, size),
@@ -71,12 +83,12 @@ def main(argv=None):
         ("snn", snn_throughput.main, exec_flag),
         # CI runs the reduced scope (32-device scenarios); --full adds
         # the Algorithm-2 forwarding replay at device scale
-        ("netsim", netsim_latency.main, [] if args.full else ["--reduced"]),
+        ("netsim", netsim_latency.main, ([] if args.full else ["--reduced"]) + trace_netsim),
         # delta-replan vs full rebuild: speedup + plan-quality drift gates
         ("replan", replan_bench.main, ["--full"] if args.full else []),
         # fixed chaos schedule: batched recovery vs rebuild, trajectory
         # bit-equality under the supervisor, netsim outage reroute
-        ("fault", fault_bench.main, []),
+        ("fault", fault_bench.main, list(trace_fault)),
         # out-of-core pipeline at native N=2,000 — always runs at paper
         # scale; the out-of-core contract is the point of the bench
         ("paper_scale", paper_scale.main, []),
@@ -104,6 +116,8 @@ def main(argv=None):
     print(f"total_wall_s,{total:.1f},")
 
     if args.json:
+        from repro import obs
+
         payload = {
             "schema": 1,
             "sha": os.environ.get("GITHUB_SHA", ""),
@@ -111,6 +125,9 @@ def main(argv=None):
             "results": common.stop_capture(),
             "section_wall_s": section_wall,
             "total_wall_s": round(total, 1),
+            # process-wide metrics registry (compile-cache hit/miss,
+            # supervisor retries, ...) accumulated across all sections
+            "obs_metrics": obs.metrics_snapshot(),
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

@@ -52,6 +52,12 @@ class PlanContext:
         any global artifact.
       balance_slack: PL130 cap, matching the partitioners' default.
       waste_threshold: PL140 per-round padding-waste warning bar.
+      bottleneck_threshold: PL180 opt-in — when set (0..1), the
+        schedule is replayed through netsim on ``topology`` and an info
+        finding reports the dominant link kind if its critical-path
+        share exceeds this fraction.  ``None`` (the default) skips the
+        rule: the replay is a full simulation, too costly to run on
+        every lint pass unasked.
     """
 
     name: str = ""
@@ -73,6 +79,7 @@ class PlanContext:
     shard_flows: np.ndarray | None = None
     balance_slack: float = 0.05
     waste_threshold: float = 0.5
+    bottleneck_threshold: float | None = None
 
     @property
     def n_groups(self) -> int | None:

@@ -952,6 +952,81 @@ def _outage_routing(ctx) -> list[Finding]:
     return out
 
 
+def _sim_rounds(ctx):
+    """The message rounds the context would put on the wire, with real
+    byte sizes — ragged plan first (the executed schedule), else the
+    Algorithm-2 forwarding schedule, else the sparse ppermute schedule
+    lowered onto the mesh.  Returns ``None`` when no schedule artifact
+    carries byte-level rounds."""
+    from repro import netsim
+
+    if ctx.ragged_plan is not None:
+        return netsim.ragged_rounds(ctx.ragged_plan)
+    if ctx.table is not None:
+        return netsim.table_rounds(ctx.table)
+    if ctx.schedule is not None and ctx.mesh_shape is not None:
+        g, r = ctx.mesh_shape
+        gm = np.zeros((g, g), dtype=bool)
+        for rnd in ctx.schedule:
+            for gs, gd in rnd:
+                if 0 <= gs < g and 0 <= gd < g:
+                    gm[gs, gd] = True
+        return netsim.sparse_rounds(gm, (g, r) if r > 1 else (g,), 1)
+    return None
+
+
+@rule(
+    "PL180",
+    severity="info",
+    summary="dominant-bottleneck attribution: one link kind holds more than bottleneck_threshold of the simulated critical path",
+    fix_hint="the named fabric tier bounds the schedule — rebalance groups across that tier, widen it, or shard payloads; the decomposition says whether serialization, propagation, or queueing dominates",
+)
+def _bottleneck_attribution(ctx) -> list[Finding]:
+    topo = ctx.topology
+    thr = ctx.bottleneck_threshold
+    if topo is None or thr is None:
+        return []
+    rounds = _sim_rounds(ctx)
+    if rounds is None:
+        return []
+    if ctx.dead:
+        dead = {int(d) for d in ctx.dead}
+        rounds = [
+            [m for m in rnd if m.src not in dead and m.dst not in dead]
+            for rnd in rounds
+        ]
+    if not any(rounds):
+        return []
+    from repro.netsim import simulate
+    from repro.obs.timeline import CATEGORIES, attribute_critical_path
+
+    res = simulate(rounds, topo, collect_hops=True)
+    if res.t_total <= 0.0:
+        return []
+    att = attribute_critical_path(res)
+    kind, frac = att.dominant_kind()
+    if frac <= thr:
+        return []
+    shares = "  ".join(
+        f"{k}={v:.1%}" for k, v in sorted(att.kind_fractions().items())
+    )
+    decomp = "  ".join(
+        f"{c}={float(att.total[c]) * 1e6:.4g}us"
+        for c in CATEGORIES
+        if att.total[c]
+    )
+    return [
+        _finding(
+            "PL180",
+            f"link kind '{kind}' holds {frac:.1%} of the simulated "
+            f"critical path on {topo.name} (> {thr:.0%} threshold, "
+            f"t_total={res.t_total * 1e6:.4g}us); shares: {shares}; "
+            f"decomposition: {decomp}",
+            ctx.name,
+        )
+    ]
+
+
 # ---------------------------------------------------------------------------
 # PL2xx — traced-step rules (checked in repro.analysis.traced against a
 # live DistributedSNN engine; registered here so the catalog is complete)

@@ -34,6 +34,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.graph import CommGraph
+from repro.obs import trace as obs
 from repro.core.partition import (
     PartitionResult,
     _result,
@@ -254,38 +255,41 @@ def multilevel_partition(
     # heavier merges would be unplaceable under the balance cap (stop_at
     # ≥ 4·n_parts keeps this ≤ the per-part capacity).
     max_cluster_w = 4.0 * float(g.weights.sum()) / stop_at
-    while levels[-1].num_vertices > stop_at and len(levels) <= max_levels:
-        cur = levels[-1]
-        coarse = heavy_edge_matching(cur, rng, max_weight=max_cluster_w)
-        mc = int(coarse.max()) + 1
-        if mc >= cur.num_vertices * 0.95:
-            break  # matching stalled; further levels would not shrink
-        if mc < stop_at:
-            # Overshoot: accept only if still enough vertices per part.
-            if mc < 2 * n_parts:
-                break
-        maps.append(coarse)
-        levels.append(coarsen_graph(cur, coarse))
+    with obs.span("plan.multilevel.coarsen", cat="plan", tid="partition") as sp:
+        while levels[-1].num_vertices > stop_at and len(levels) <= max_levels:
+            cur = levels[-1]
+            coarse = heavy_edge_matching(cur, rng, max_weight=max_cluster_w)
+            mc = int(coarse.max()) + 1
+            if mc >= cur.num_vertices * 0.95:
+                break  # matching stalled; further levels would not shrink
+            if mc < stop_at:
+                # Overshoot: accept only if still enough vertices per part.
+                if mc < 2 * n_parts:
+                    break
+            maps.append(coarse)
+            levels.append(coarsen_graph(cur, coarse))
+        sp.set(levels=len(levels), coarsest=levels[-1].num_vertices)
 
     # Initial partition on the coarsest graph via Algorithm 1.  The
     # coarsest graph is small, so run a few seeded fronts and keep the
     # best — the standard multilevel trick for a robust starting point.
     coarsest = levels[-1]
     cg = _as_commgraph(coarsest)
-    init = min(
-        (
-            greedy_partition(
-                cg,
-                n_parts,
-                itermax=itermax,
-                balance_slack=balance_slack,
-                seed=s,
-                swap_moves=False,  # coarse seed only; see greedy_partition
-            )
-            for s in range(seed, seed + 3)
-        ),
-        key=lambda r: r.cut,
-    )
+    with obs.span("plan.multilevel.init_partition", cat="plan", tid="partition"):
+        init = min(
+            (
+                greedy_partition(
+                    cg,
+                    n_parts,
+                    itermax=itermax,
+                    balance_slack=balance_slack,
+                    seed=s,
+                    swap_moves=False,  # coarse seed only; see greedy_partition
+                )
+                for s in range(seed, seed + 3)
+            ),
+            key=lambda r: r.cut,
+        )
     assign = init.assign.copy()
     history = [coarsest.cut(assign)]
     cap = float(g.weights.sum()) / n_parts * (1.0 + balance_slack)
@@ -293,26 +297,27 @@ def multilevel_partition(
     # Uncoarsen: project through each map, restore balance (the coarse
     # greedy works at lumpier granularity and may overshoot the cap), and
     # repair the boundary.
-    for level, coarse in zip(reversed(levels[:-1]), reversed(maps)):
-        assign = assign[coarse]
-        rebalance_csr(
-            level.indptr, level.indices, level.tval, level.w, assign, n_parts, cap
-        )
-        args = (level.indptr, level.indices, level.tval, level.w, assign, n_parts, cap)
-        # Balanced pair-swaps escape the fixed points single moves cannot
-        # leave (transposed community members) — but only on the finest
-        # level, where a swap improves the *true* objective; escaping a
-        # coarse-level optimum merely perturbs the uncoarsening
-        # trajectory, which is not monotone in the final cut.
-        finest = level is levels[0]
-        for _ in range(refine_sweeps):
-            if refine_sweep_csr(*args) == 0:
-                # The independent-set sweep is stuck in a local optimum;
-                # one exact sequential pass lets adjacent moves cascade.
-                if refine_sweep_csr_seq(*args) == 0:
-                    if not finest or swap_sweep_csr_seq(*args) == 0:
-                        break
-        history.append(level.cut(assign))
+    with obs.span("plan.multilevel.uncoarsen_refine", cat="plan", tid="partition"):
+        for level, coarse in zip(reversed(levels[:-1]), reversed(maps)):
+            assign = assign[coarse]
+            rebalance_csr(
+                level.indptr, level.indices, level.tval, level.w, assign, n_parts, cap
+            )
+            args = (level.indptr, level.indices, level.tval, level.w, assign, n_parts, cap)
+            # Balanced pair-swaps escape the fixed points single moves cannot
+            # leave (transposed community members) — but only on the finest
+            # level, where a swap improves the *true* objective; escaping a
+            # coarse-level optimum merely perturbs the uncoarsening
+            # trajectory, which is not monotone in the final cut.
+            finest = level is levels[0]
+            for _ in range(refine_sweeps):
+                if refine_sweep_csr(*args) == 0:
+                    # The independent-set sweep is stuck in a local optimum;
+                    # one exact sequential pass lets adjacent moves cascade.
+                    if refine_sweep_csr_seq(*args) == 0:
+                        if not finest or swap_sweep_csr_seq(*args) == 0:
+                            break
+            history.append(level.cut(assign))
     res = _result(g, assign, n_parts, tuple(history), "multilevel")
     if compare_greedy is None:
         compare_greedy = m <= GREEDY_GUARD_MAX_M

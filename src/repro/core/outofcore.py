@@ -49,6 +49,7 @@ import time
 import numpy as np
 
 from repro.core.graph import CommGraph, induced_subgraph
+from repro.obs import trace as obs
 from repro.core.routing import (
     RoutingTable,
     device_traffic_csr,
@@ -311,6 +312,7 @@ def plan_out_of_core(
 
     # ---- tier 1: populations → pods, then pods → local devices --------
     t0 = time.perf_counter()
+    _ts = obs.now_us()
     pod_parts = multilevel_partition(
         graph, n_pods, itermax=itermax, balance_slack=balance_slack, seed=seed
     )
@@ -331,9 +333,12 @@ def plan_out_of_core(
         )
         assign[verts] = p * pod_size + local.assign
     wall["partition_s"] = time.perf_counter() - t0
+    obs.complete("outofcore.partition", _ts, wall["partition_s"] * 1e6,
+                 cat="plan", tid="outofcore", args={"n_pods": n_pods})
 
     # ---- global device CSR + pod tier (both O(nnz) / O(P²)) -----------
     t0 = time.perf_counter()
+    _ts = obs.now_us()
     tm, wg = device_traffic_csr(graph, assign, n_devices, sym_mode=sym_mode)
     pod_of = np.arange(n_devices, dtype=np.int64) // pod_size
     pod_bridge, pod_share = select_bridges(tm, pod_of, n_pods)
@@ -348,6 +353,8 @@ def plan_out_of_core(
     )
     pod_table.validate()
     wall["pod_route_s"] = time.perf_counter() - t0
+    obs.complete("outofcore.pod_route", _ts, wall["pod_route_s"] * 1e6,
+                 cat="plan", tid="outofcore")
 
     # ---- tier 2: one self-contained shard per pod ---------------------
     t0 = time.perf_counter()
@@ -356,6 +363,7 @@ def plan_out_of_core(
     shards: list[PodShard] = []
     lint_err = lint_warn = 0
     for p in range(n_pods):
+        _pts = obs.now_us()
         lo, hi = p * pod_size, (p + 1) * pod_size
         s, e = int(rows_ptr[lo]), int(rows_ptr[hi])
         cols_sl = tm.indices[s:e]
@@ -439,10 +447,14 @@ def plan_out_of_core(
             shard_hook(shard)
         if keep_shards:
             shards.append(shard)
+        obs.complete("outofcore.shard", _pts, obs.now_us() - _pts,
+                     cat="plan", tid="outofcore",
+                     args={"pod": p, "lint_findings": len(findings)})
     wall["shards_s"] = time.perf_counter() - t0
 
     # ---- DCN mask/schedule + the cross-shard conservation context -----
     t0 = time.perf_counter()
+    _ts = obs.now_us()
     pod_gmask = shard_flows > 0
     np.fill_diagonal(pod_gmask, True)
     pod_schedule = exchange_schedule(pod_gmask)
@@ -460,6 +472,8 @@ def plan_out_of_core(
     )
     dcn_findings = tuple(run_lints(dcn_ctx)) if lint else ()
     wall["dcn_lint_s"] = time.perf_counter() - t0
+    obs.complete("outofcore.dcn_lint", _ts, wall["dcn_lint_s"] * 1e6,
+                 cat="plan", tid="outofcore")
 
     return OutOfCorePlan(
         n_devices=n_devices,

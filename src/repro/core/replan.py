@@ -42,6 +42,7 @@ import numpy as np
 from repro.core import partition as part_mod
 from repro.core.routing import RoutingTable, select_bridges
 from repro.core.traffic import TrafficMatrix
+from repro.obs import trace as obs
 
 __all__ = [
     "ReplanResult",
@@ -200,7 +201,9 @@ def replan(
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
     dvals = np.asarray(dvals, dtype=np.float64)
-    tm_new = tb.device_traffic.apply_delta(src, dst, dvals)
+    with obs.span("replan.apply_delta", cat="plan", tid="replan",
+                  args={"nnz": int(dvals.size)}):
+        tm_new = tb.device_traffic.apply_delta(src, dst, dvals)
     dead_idx = (
         np.unique(np.asarray(dead, dtype=np.int64).ravel())
         if dead is not None
@@ -246,15 +249,18 @@ def _replan_core(
         if touched_dev.size
         else np.empty(0, dtype=np.int64)
     )
-    group_of_new, moves = local_regroup(
-        tm_new,
-        wg,
-        tb.group_of,
-        region,
-        g,
-        balance_slack=balance_slack,
-        sweeps=sweeps,
-    )
+    with obs.span("replan.local_regroup", cat="plan", tid="replan",
+                  args={"region_groups": int(region.size)}) as sp:
+        group_of_new, moves = local_regroup(
+            tm_new,
+            wg,
+            tb.group_of,
+            region,
+            g,
+            balance_slack=balance_slack,
+            sweeps=sweeps,
+        )
+        sp.set(moved=int(moves))
 
     # 2. restricted re-election: groups whose outgoing pair-traffic row
     # changed, whose membership changed, or which hold a dead device
@@ -270,14 +276,16 @@ def _replan_core(
             [rows_changed, mem_changed, group_of_new[dead_idx]]
         ).astype(np.int64)
     )
-    bridge, share_coo = select_bridges(
-        tm_new,
-        group_of_new,
-        g,
-        only_groups=only,
-        base=(tb.bridge, tb.share_coo),
-        exclude=dead_mask if dead_idx.size else None,
-    )
+    with obs.span("replan.reelect_bridges", cat="plan", tid="replan",
+                  args={"groups": int(only.size)}):
+        bridge, share_coo = select_bridges(
+            tm_new,
+            group_of_new,
+            g,
+            only_groups=only,
+            base=(tb.bridge, tb.share_coo),
+            exclude=dead_mask if dead_idx.size else None,
+        )
     tb_new = RoutingTable(
         group_of=group_of_new,
         n_groups=g,
@@ -499,6 +507,8 @@ def rejoin_devices(
     """
     if not isinstance(tb.device_traffic, TrafficMatrix):
         raise ValueError("rejoin_devices needs the sparse TrafficMatrix path")
+    obs.instant("replan.rejoin", cat="recovery", tid="replan",
+                args={"devices": [int(d) for d in np.asarray(evac.dead).ravel()]})
     tm_restored = evac.restore_matrix(tb.device_traffic)
     ds, dd, _ = evac.delta
     touched_dev = np.unique(np.concatenate([ds, dd, evac.dead, evac.hosts]))

@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.graph import CommGraph, build_graph
 from repro.core.traffic import TrafficMatrix, _ranges
 from repro.core import partition as part_mod
+from repro.obs import trace as obs
 
 __all__ = [
     "RoutingTable",
@@ -328,11 +329,14 @@ def two_level_routing(
             raise ValueError("too few devices for grouping")
         dg = _graph_from_traffic(tm, wg)  # built once, shared by the sweep
         best, best_peak = None, np.inf
-        for g in cands:
-            tb = _route(tm, wg, g, dg, itermax, balance_slack, seed, grouping)
-            peak = float(level2_egress(tb).max())
-            if peak < best_peak:
-                best, best_peak = tb, peak
+        with obs.span("plan.alg2.sweep_G", cat="plan", tid="route",
+                      args={"candidates": len(cands)}) as sp:
+            for g in cands:
+                tb = _route(tm, wg, g, dg, itermax, balance_slack, seed, grouping)
+                peak = float(level2_egress(tb).max())
+                if peak < best_peak:
+                    best, best_peak = tb, peak
+            sp.set(best_G=best.n_groups, peak_l2=best_peak)
         return best
     if n_groups <= 0 or n_groups > n:
         raise ValueError("need 1 <= n_groups <= n_devices")
@@ -350,9 +354,13 @@ def _route(
     seed: int,
     grouping: str,
 ) -> RoutingTable:
-    res = _GROUPERS[grouping](dg, n_groups, itermax, balance_slack, seed)
+    with obs.span("plan.alg2.grouping", cat="plan", tid="route",
+                  args={"G": n_groups, "method": grouping}):
+        res = _GROUPERS[grouping](dg, n_groups, itermax, balance_slack, seed)
     group_of = res.assign
-    bridge, share_coo = select_bridges(tm, group_of, n_groups)
+    with obs.span("plan.alg2.select_bridges", cat="plan", tid="route",
+                  args={"G": n_groups}):
+        bridge, share_coo = select_bridges(tm, group_of, n_groups)
     tb = RoutingTable(
         group_of=group_of,
         n_groups=n_groups,
@@ -361,7 +369,8 @@ def _route(
         method=grouping,
         share_coo=share_coo,
     )
-    tb.validate()
+    with obs.span("plan.alg2.validate", cat="plan", tid="route"):
+        tb.validate()
     return tb
 
 

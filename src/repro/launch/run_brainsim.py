@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import (
     device_traffic_csr,
     greedy_partition,
@@ -36,8 +37,13 @@ def main():
     )
     ap.add_argument("--noise", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="PATH",
+                    help="export a Chrome-trace JSON of the whole run "
+                         "(planner spans + executor profile)")
     args = ap.parse_args()
 
+    if args.trace:
+        obs.enable()
     n_dev = jax.device_count()
     bm = generate_brain_model(
         n_populations=args.populations,
@@ -45,9 +51,11 @@ def main():
         total_neurons=1_000_000,
         seed=args.seed,
     )
-    part = greedy_partition(bm.graph, n_dev, seed=args.seed)
+    with obs.span("launch.partition", cat="plan", tid="launch"):
+        part = greedy_partition(bm.graph, n_dev, seed=args.seed)
     t, wg = device_traffic_csr(bm.graph, part.assign, n_dev)  # sparse CSR
-    tb = two_level_routing(t, wg, max(2, n_dev // 4))
+    with obs.span("launch.route", cat="plan", tid="launch"):
+        tb = two_level_routing(t, wg, max(2, n_dev // 4))
     print(
         f"devices={n_dev} cut={part.cut:.1f} groups={tb.n_groups} "
         f"latency p2p={step_latency(p2p_routing(t, wg)).t_total*1e3:.2f}ms "
@@ -74,7 +82,14 @@ def main():
         exchange=args.exchange,
         i_ext=3.5,
     )
-    raster = np.asarray(eng.run(args.steps, key=jax.random.PRNGKey(args.seed)))
+    if args.trace and args.exchange in ("sparse", "ragged"):
+        prof = eng.step_profile(min(args.steps, 4),
+                                key=jax.random.PRNGKey(args.seed))
+        print("step profile: " + "  ".join(
+            f"{k}={v:.4g}" for k, v in sorted(prof.items())))
+    with obs.span("launch.run", cat="exec", tid="launch",
+                  args={"exchange": args.exchange, "steps": args.steps}):
+        raster = np.asarray(eng.run(args.steps, key=jax.random.PRNGKey(args.seed)))
     print(
         f"simulated {m} neurons × {args.steps} steps ({args.exchange} exchange): "
         f"{int(raster.sum())} spikes, mean rate {raster.mean():.4f}"
@@ -85,6 +100,10 @@ def main():
             "slow-axis bytes/step: "
             + "  ".join(f"{k}={v}" for k, v in sorted(vol.items()))
         )
+    if args.trace:
+        obs.disable()
+        obs.write_chrome_trace(args.trace)
+        print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

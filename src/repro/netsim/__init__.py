@@ -22,7 +22,7 @@ from repro.netsim.adapters import (
     table_rounds,
     total_bytes,
 )
-from repro.netsim.events import Delivery, EventQueue, Message
+from repro.netsim.events import Delivery, EventQueue, Message, Transmission
 from repro.netsim.simulate import LinkOutage, SimResult, simulate
 from repro.netsim.topology import (
     DEFAULT_ALPHA,
@@ -41,6 +41,7 @@ from repro.netsim.whatif import payload_sharding_whatif, sharded_ragged_rounds
 __all__ = [
     "Message",
     "Delivery",
+    "Transmission",
     "EventQueue",
     "SimResult",
     "simulate",

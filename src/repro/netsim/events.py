@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 
-__all__ = ["Message", "Delivery", "EventQueue"]
+__all__ = ["Message", "Delivery", "Transmission", "EventQueue"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +53,39 @@ class Delivery:
     t_deliver: float
     queue_wait: float  # total time spent waiting behind busy links
     n_hops: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Transmission:
+    """One link occupation — a single hop of a single message
+    (``collect_hops=True`` or an enabled tracer).
+
+    The four timestamps partition the hop's wall interval exactly:
+    ``[t_arr, t_qend)`` is FIFO queueing behind earlier traffic on the
+    link, ``[t_qend, t_start)`` is stalling for a down window to end,
+    and ``[t_start, t_end)`` is the transmission itself (``alpha_eff``
+    propagation + serialization).  For hop ``h > 0``, ``t_arr`` equals
+    the previous hop's ``t_end`` *bit-for-bit* (the event queue re-pops
+    the pushed float), and hop 0's ``t_arr`` equals the batch injection
+    time — the structural identities :mod:`repro.obs.timeline` exploits
+    to decompose ``t_total`` with zero residual.
+    """
+
+    batch: int  # injection-wave index (pipelined: 0; barriers: round)
+    msg: int  # message index within the batch
+    round: int
+    src: int
+    dst: int
+    nbytes: int
+    tag: str
+    hop: int
+    link: int
+    kind: str
+    t_arr: float  # arrival at this link (pop time)
+    t_qend: float  # queue cleared: max(t_arr, link free time)
+    t_start: float  # transmission start (after any outage stall)
+    t_end: float  # transmission end (start + alpha_eff + nbytes·beta)
+    alpha_eff: float  # link alpha, + alpha_msg on hop 0
 
 
 class EventQueue:

@@ -30,8 +30,9 @@ from collections.abc import Sequence
 
 import numpy as np
 
-from repro.netsim.events import Delivery, EventQueue, Message
+from repro.netsim.events import Delivery, EventQueue, Message, Transmission
 from repro.netsim.topology import Topology
+from repro.obs import trace as _obs
 
 __all__ = ["LinkOutage", "SimResult", "simulate"]
 
@@ -121,6 +122,14 @@ class SimResult:
       link_down_s: ``float64[n_links]`` seconds each link was down
         within the simulated horizon (``None`` on results built before
         outages existed — treated as all-up).
+      transmissions: per-hop :class:`Transmission` records when
+        ``collect_hops=True`` or the tracer was enabled (else empty) —
+        the input to :mod:`repro.obs.timeline` critical-path
+        attribution.
+      batch_windows: ``(t_start, t_end)`` per injection wave, with each
+        wave's start equal to the previous wave's end bit-for-bit (the
+        telescoping the attribution's exactness rests on).
+      t0: the injection origin the simulation ran with.
     """
 
     t_total: float
@@ -139,6 +148,9 @@ class SimResult:
     n_rerouted: int = 0
     outage_stall_s: float = 0.0
     link_down_s: np.ndarray | None = None
+    transmissions: tuple[Transmission, ...] = ()
+    batch_windows: tuple[tuple[float, float], ...] = ()
+    t0: float = 0.0
 
     @property
     def round_makespans(self) -> tuple[float, ...]:
@@ -167,6 +179,16 @@ class SimResult:
             out[lnk.kind] = max(out.get(lnk.kind, 0.0), u)
         return out
 
+    def link_utilization(self) -> np.ndarray:
+        """Per-link utilization (busy / t_total), ``float64[n_links]``.
+
+        An empty schedule (``t_total == 0``) utilizes nothing — all
+        zeros, never a division by zero.
+        """
+        if self.t_total <= 0:
+            return np.zeros_like(self.link_busy_s)
+        return self.link_busy_s / self.t_total
+
     def bottleneck_link(self) -> int:
         """Id of the busiest link (the congestion point)."""
         return int(np.argmax(self.link_busy_s))
@@ -181,6 +203,12 @@ class SimResult:
         neither hides a genuinely hot NIC nor lets a mostly-down link's
         low raw busy time misattribute the straggler.  With no outages
         the factor is 1 and the ranking is the historical busiest-egress.
+
+        The normalization clamps: down time is capped at ``t_total``
+        (an outage window can extend past the horizon) and availability
+        at 1% of the horizon, so a link down for (nearly) the whole run
+        scores at most 100× its raw busy time instead of diverging.
+        ``t_total == 0`` skips normalization entirely.
         """
         egress = self.topology.device_egress_links()
         down = self.link_down_s
@@ -190,8 +218,9 @@ class SimResult:
             for l in ls:
                 busy = float(self.link_busy_s[l])
                 if down is not None and self.t_total > 0 and busy > 0:
-                    avail = self.t_total - float(down[l])
-                    busy *= self.t_total / max(avail, 1e-12)
+                    down_l = min(float(down[l]), self.t_total)
+                    avail = max(self.t_total - down_l, 0.01 * self.t_total)
+                    busy *= self.t_total / avail
                 s += busy
             scores.append(s)
         return int(np.argmax(scores))
@@ -221,6 +250,7 @@ def simulate(
     alpha_msg: float = 0.0,
     barriers: bool = False,
     collect_events: bool = False,
+    collect_hops: bool = False,
     t0: float = 0.0,
     outages: Sequence[LinkOutage] = (),
 ) -> SimResult:
@@ -245,6 +275,9 @@ def simulate(
         (Algorithm-2 forwarding: bridges aggregate only after level-1
         delivers).
       collect_events: keep a :class:`Delivery` record per message.
+      collect_hops: keep a :class:`Transmission` record per link hop
+        (forced on while the :mod:`repro.obs` tracer is enabled, which
+        also mirrors the timeline into the active trace).
       outages: :class:`LinkOutage` down windows.  A transmission never
         *starts* inside a window (in-flight frames drain); a message
         whose first hop finds a path link down switches to the
@@ -271,13 +304,17 @@ def simulate(
     win = _down_windows(outages, n_links)
     n_rerouted = 0
     outage_stall = 0.0
+    tracing = _obs.is_enabled()
+    collect_hops = collect_hops or tracing
+    hops: list[Transmission] = []
+    windows_out: list[tuple[float, float]] = []
 
     if barriers:
         batches = [[(ri, m) for m in rnd] for ri, rnd in enumerate(rounds)]
     else:  # one injection wave, round-major order
         batches = [[(ri, m) for ri, rnd in enumerate(rounds) for m in rnd]]
 
-    for batch in batches:
+    for bi, batch in enumerate(batches):
         paths = [topo.route(m.src, m.dst) for _, m in batch]
         waits = [0.0] * len(batch)
         t_end = t_round
@@ -309,15 +346,23 @@ def simulate(
             lid = path[hop]
             lnk = topo.links[lid]
             dur = lnk.alpha + m.nbytes * lnk.beta
+            alpha_eff = lnk.alpha
             if hop == 0:
                 dur += alpha_msg
+                alpha_eff += alpha_msg
             start = t if t >= free[lid] else free[lid]
+            t_qend = start
             if win:
                 up = _clear_of(win.get(lid), start)
                 outage_stall += up - start
                 start = up
             waits[mi] += start - t
             end = start + dur
+            if collect_hops:
+                hops.append(Transmission(
+                    bi, mi, ri, m.src, m.dst, m.nbytes, m.tag, hop, lid,
+                    lnk.kind, t, t_qend, start, end, alpha_eff,
+                ))
             free[lid] = end
             busy[lid] += dur
             link_bytes[lid] += m.nbytes
@@ -345,6 +390,7 @@ def simulate(
                             len(path),
                         )
                     )
+        windows_out.append((t_round, t_end))
         t_round = t_end  # with barriers: next round starts after the slowest
 
     down_s = np.zeros(n_links)
@@ -353,7 +399,7 @@ def simulate(
             max(0.0, min(hi, t_round) - max(lo, float(t0)))
             for lo, hi in windows
         )
-    return SimResult(
+    result = SimResult(
         t_total=(t_round - t0) if n_rounds else 0.0,
         round_ends=tuple(float(e) for e in round_ends),
         n_injected=n_inj,
@@ -370,4 +416,14 @@ def simulate(
         n_rerouted=n_rerouted,
         outage_stall_s=outage_stall,
         link_down_s=down_s,
+        transmissions=tuple(hops),
+        batch_windows=tuple(windows_out),
+        t0=float(t0),
     )
+    if tracing:
+        # mirror the simulated timeline into the active trace, sim
+        # second 0 anchored at the wall-clock moment we finished
+        from repro.obs.timeline import emit_simulation
+
+        emit_simulation(result)
+    return result

@@ -1,0 +1,86 @@
+"""repro.obs — unified tracing, metrics, and critical-path attribution.
+
+One shared clock across every layer of the pipeline:
+
+* :mod:`~repro.obs.trace` — the zero-dependency tracer (nestable spans,
+  instants, labeled counters; process-global, off by default, one
+  branch when disabled) plus the always-on metrics registry;
+* :mod:`~repro.obs.export` — Chrome-trace-event JSON (Perfetto-
+  loadable, deterministic bytes) and schema validation;
+* :mod:`~repro.obs.timeline` — simulated transmissions as trace events
+  and the *exact* critical-path decomposition of a
+  :class:`~repro.netsim.SimResult` into serialization / propagation /
+  queueing / outage-stall per round and per link kind.
+
+``python -m repro.obs validate|summarize TRACE.json`` inspects an
+exported trace; ``--trace PATH`` on ``launch/run_brainsim.py``,
+``benchmarks/netsim_latency.py``, and ``benchmarks/fault_bench.py``
+produces one.
+"""
+from repro.obs.export import (
+    chrome_trace,
+    dumps_chrome_trace,
+    validate_chrome_trace,
+    write_chrome_trace,
+)
+from repro.obs.timeline import (
+    CATEGORIES,
+    CriticalPathAttribution,
+    CriticalSegment,
+    attribute_critical_path,
+    emit_simulation,
+    export_simulation_trace,
+    trace_events,
+)
+from repro.obs.trace import (
+    METRICS,
+    TRACER,
+    Metrics,
+    Tracer,
+    clear,
+    complete,
+    counter,
+    disable,
+    enable,
+    events,
+    instant,
+    is_enabled,
+    metric_gauge,
+    metric_inc,
+    metrics_reset,
+    metrics_snapshot,
+    now_us,
+    span,
+)
+
+__all__ = [
+    "Tracer",
+    "TRACER",
+    "Metrics",
+    "METRICS",
+    "enable",
+    "disable",
+    "is_enabled",
+    "clear",
+    "events",
+    "now_us",
+    "span",
+    "instant",
+    "counter",
+    "complete",
+    "metric_inc",
+    "metric_gauge",
+    "metrics_snapshot",
+    "metrics_reset",
+    "chrome_trace",
+    "dumps_chrome_trace",
+    "write_chrome_trace",
+    "validate_chrome_trace",
+    "CATEGORIES",
+    "CriticalSegment",
+    "CriticalPathAttribution",
+    "attribute_critical_path",
+    "trace_events",
+    "emit_simulation",
+    "export_simulation_trace",
+]

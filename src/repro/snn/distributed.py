@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +53,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import shard_map
 
 from repro.core.routing import pool_block_mask
+from repro.obs import trace as obs
 from repro.kernels.ops import KernelPolicy, spike_currents_blocks
 from repro.snn.ragged import RaggedPlan, build_ragged_plan
 from repro.snn.sparse import BlockSynapses, exchange_schedule, exchange_volume
@@ -339,6 +341,56 @@ class DistributedSNN:
         w = jax.device_put(self.w_syn, NamedSharding(self.mesh, col_spec))
         return jax.jit(_run)(v0, u0, keys, w)
 
+    def step_profile(
+        self, n_steps: int = 2, *, key: jax.Array | None = None
+    ) -> dict[str, float]:
+        """Opt-in blocked per-phase host profile of one sparse/ragged run.
+
+        Phases are timed on the host with ``jax.block_until_ready`` at
+        each boundary — *blocked* timings, so a phase's number is wall
+        time until its results exist, not dispatch time:
+
+        * ``prepare_s`` — building/looking up the compiled step and
+          staging its device inputs (``_sparse_callable_and_args``);
+        * ``first_call_s`` — first execution, compile included;
+        * ``steady_call_s`` — second execution (compile-cache warm);
+
+        plus the engine's :meth:`exchange_stats` byte ledger
+        (``bytes_per_step``, chosen exchange) and the process-wide
+        ``_StepKey`` compile-cache hit/miss counters.  Each phase is
+        also emitted as a tracer span and the bytes as counters, so a
+        ``--trace`` run shows the executor on the shared clock.
+        """
+        if self.exchange not in ("sparse", "ragged"):
+            raise ValueError("step_profile covers exchange='sparse'/'ragged'")
+        key = jax.random.PRNGKey(0) if key is None else key
+        prof: dict[str, float] = {}
+        with obs.span("snn.step_profile", cat="exec", tid="snn",
+                      args={"exchange": self.exchange, "n_steps": n_steps}):
+            t = time.perf_counter()
+            with obs.span("snn.prepare", cat="exec", tid="snn"):
+                fn, args = self._sparse_callable_and_args(n_steps, key=key)
+                jax.block_until_ready(args)
+            prof["prepare_s"] = time.perf_counter() - t
+            t = time.perf_counter()
+            with obs.span("snn.first_call", cat="exec", tid="snn"):
+                jax.block_until_ready(fn(*args))
+            prof["first_call_s"] = time.perf_counter() - t
+            t = time.perf_counter()
+            with obs.span("snn.steady_call", cat="exec", tid="snn"):
+                jax.block_until_ready(fn(*args))
+            prof["steady_call_s"] = time.perf_counter() - t
+        stats = self.exchange_stats()
+        bytes_step = float(stats[self.exchange])
+        prof["bytes_per_step"] = bytes_step
+        obs.counter("snn.exchange_bytes",
+                    {k: float(v) for k, v in stats.items()}, tid="snn")
+        obs.metric_gauge("snn.bytes_per_step", bytes_step)
+        ci = _sparse_step.cache_info()
+        prof["step_cache_hits"] = float(ci.hits)
+        prof["step_cache_misses"] = float(ci.misses)
+        return prof
+
     def _step_key(self, n_steps: int) -> "_StepKey":
         return _StepKey(
             mesh=self.mesh,
@@ -378,7 +430,12 @@ class DistributedSNN:
             )
         else:
             idx_arrays = ()
+        misses_before = _sparse_step.cache_info().misses
         fn = _sparse_step(self._step_key(n_steps))
+        if _sparse_step.cache_info().misses > misses_before:
+            obs.metric_inc("snn.step_cache_misses")
+        else:
+            obs.metric_inc("snn.step_cache_hits")
         # one key per device over the full mesh (see the dense path)
         keys = jax.random.split(key, n_dev)
         st0 = init_state(syn.n_neurons, self.params, key)

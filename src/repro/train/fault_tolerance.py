@@ -43,6 +43,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.obs import trace as obs
 from repro.train import checkpoint as ckpt_mod
 
 __all__ = [
@@ -208,17 +209,21 @@ class Supervisor:
             self._last_ckpt_step = self.step
 
     def _rollback(self) -> bool:
-        self.checkpointer.wait()
-        # newest *intact* checkpoint: a corrupt latest (torn write,
-        # bit-rot) fails its manifest checksums and the scan falls back
-        # to the newest one that verifies
-        latest = ckpt_mod.latest_step(self.cfg.ckpt_dir, intact_only=True)
-        if latest is None:
-            return False
-        self.params, self.opt_state, manifest = ckpt_mod.restore(
-            self.cfg.ckpt_dir, latest, self.params, self.opt_state
-        )
-        self.step = manifest["step"]
+        with obs.span("supervisor.rollback", cat="recovery",
+                      tid="supervisor") as sp:
+            self.checkpointer.wait()
+            # newest *intact* checkpoint: a corrupt latest (torn write,
+            # bit-rot) fails its manifest checksums and the scan falls back
+            # to the newest one that verifies
+            latest = ckpt_mod.latest_step(self.cfg.ckpt_dir, intact_only=True)
+            if latest is None:
+                sp.set(restored=False)
+                return False
+            self.params, self.opt_state, manifest = ckpt_mod.restore(
+                self.cfg.ckpt_dir, latest, self.params, self.opt_state
+            )
+            self.step = manifest["step"]
+            sp.set(restored=True, to_step=self.step)
         return True
 
     # -- main loop -------------------------------------------------------
@@ -230,6 +235,7 @@ class Supervisor:
             restarted = False
             retries = 0
             t_step = time.monotonic()  # cumulative: every attempt counts
+            _step_ts = obs.now_us()
             for attempt in range(self.cfg.max_retries_per_step + 1):
                 # (re-)fetch for the *current* step: a rollback resets
                 # self.step to the checkpoint, and replaying the
@@ -256,20 +262,51 @@ class Supervisor:
                     # only) evacuate+replan → rollback; degraded mode if
                     # the shrunken group cannot absorb the loss
                     kind = classify_failure(err)
+                    obs.instant(
+                        "supervisor.failure", cat="recovery", tid="supervisor",
+                        args={
+                            "step": self.step, "attempt": attempt,
+                            "kind": kind, "error": type(err).__name__,
+                            "devices": list(getattr(err, "devices", ())),
+                        },
+                    )
+                    obs.metric_inc("supervisor.retries")
+                    obs.metric_inc(f"supervisor.failures.{kind}")
                     delay = backoff_delay(self.cfg, self.step, attempt)
                     if delay > 0:
+                        _ts = obs.now_us()
                         self._sleep(delay)
+                        obs.complete(
+                            "supervisor.backoff", _ts, delay * 1e6,
+                            cat="recovery", tid="supervisor",
+                            args={"delay_s": delay, "attempt": attempt},
+                        )
                     if isinstance(err, DeviceFailure) and kind == "fatal":
                         self.dead.extend(
                             d for d in err.devices if d not in self.dead
                         )
                         if self.replan_hook:
-                            self.replan_hook(err.device)
+                            with obs.span("supervisor.replan", cat="recovery",
+                                          tid="supervisor",
+                                          args={"device": err.device}):
+                                self.replan_hook(err.device)
                         if self.evacuate_hook:
-                            if not self.evacuate_hook(err.devices):
+                            with obs.span(
+                                "supervisor.evacuate", cat="recovery",
+                                tid="supervisor",
+                                args={"devices": list(err.devices)},
+                            ) as sp:
+                                absorbed = bool(self.evacuate_hook(err.devices))
+                                sp.set(absorbed=absorbed)
+                            if not absorbed:
                                 if not self.cfg.allow_degraded:
                                     raise
                                 self.degraded = True
+                                obs.instant(
+                                    "supervisor.degraded", cat="recovery",
+                                    tid="supervisor",
+                                    args={"dead": list(self.dead)},
+                                )
                     if not self._rollback():
                         # no checkpoint yet: retry with fresh state
                         continue
@@ -281,6 +318,12 @@ class Supervisor:
                 else (1 - self.cfg.ewma_alpha) * self._ewma + self.cfg.ewma_alpha * dt
             )
             self.step += 1
+            obs.complete(
+                "supervisor.step", _step_ts, dt * 1e6, cat="train",
+                tid="supervisor",
+                args={"step": self.step, "loss": loss, "retries": retries,
+                      "straggler": straggler, "degraded": self.degraded},
+            )
             self.history.append(
                 StepResult(
                     self.step,

@@ -1,0 +1,492 @@
+"""repro.obs: tracer semantics, Chrome-trace export, exact critical-path
+attribution, and the cross-layer instrumentation hooks.
+
+The conservation tests are the load-bearing ones: the decomposition's
+exactness claim (Σ segments == t_total at tolerance 0) is checked as a
+property over seeds × fabrics × barrier modes × outage windows — the
+same grid the benchmarks gate.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import netsim, obs
+from repro.obs import export as obs_export
+from repro.obs import timeline as obs_timeline
+from repro.obs import trace as obs_trace
+
+
+@pytest.fixture()
+def tracer():
+    """A fresh private Tracer with a deterministic injected clock."""
+    tr = obs_trace.Tracer()
+    t = {"now": 100.0}
+    tr.enable(clock=lambda: t["now"])
+    return tr, t
+
+
+@pytest.fixture(autouse=True)
+def _global_tracer_off():
+    """Tests that enable the global tracer must not leak state."""
+    yield
+    obs.disable()
+    obs.TRACER._events = []
+    obs.TRACER._anchored = False
+    obs.TRACER._clock = __import__("time").perf_counter
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+
+class TestTracer:
+    def test_disabled_by_default_and_noop_span_is_shared(self):
+        assert not obs.is_enabled()
+        s1 = obs.span("a")
+        s2 = obs.span("b", cat="plan", args={"x": 1})
+        assert s1 is s2  # the single shared no-op — zero allocation
+        with s1 as s:
+            s.set(anything=1)  # must be accepted and dropped
+        assert obs.events() == []
+        obs.instant("nope")
+        obs.counter("nope", 3)
+        obs.complete("nope", 0.0, 1.0)
+        assert obs.events() == []
+
+    def test_span_records_complete_event(self, tracer):
+        tr, t = tracer
+        with tr.span("work", cat="plan", pid="p", tid="q",
+                     args={"n": 4}) as sp:
+            t["now"] = 100.5
+            sp.set(result=7)
+        (ev,) = tr.events()
+        assert ev["ph"] == "X" and ev["name"] == "work"
+        assert ev["ts"] == 0.0 and ev["dur"] == pytest.approx(0.5e6)
+        assert ev["pid"] == "p" and ev["tid"] == "q"
+        assert ev["args"] == {"n": 4, "result": 7}
+
+    def test_nested_spans_order_and_times(self, tracer):
+        tr, t = tracer
+        with tr.span("outer"):
+            t["now"] = 101.0
+            with tr.span("inner"):
+                t["now"] = 102.0
+            t["now"] = 103.0
+        inner, outer = tr.events()  # inner exits first
+        assert inner["name"] == "inner" and outer["name"] == "outer"
+        assert inner["ts"] == pytest.approx(1e6)
+        assert inner["dur"] == pytest.approx(1e6)
+        assert outer["ts"] == 0.0 and outer["dur"] == pytest.approx(3e6)
+
+    def test_instant_and_counter(self, tracer):
+        tr, t = tracer
+        tr.instant("mark", args={"k": 1})
+        tr.counter("bytes", 12.0)
+        tr.counter("split", {"a": 1, "b": 2})
+        i, c1, c2 = tr.events()
+        assert i["ph"] == "i" and i["s"] == "t"
+        assert c1["ph"] == "C" and c1["args"] == {"value": 12.0}
+        assert c2["args"] == {"a": 1.0, "b": 2.0}
+
+    def test_disable_enable_keeps_one_time_axis(self, tracer):
+        tr, t = tracer
+        tr.instant("before")
+        tr.disable()
+        t["now"] = 200.0
+        tr.instant("dropped")
+        tr.enable()  # must NOT re-anchor: ts keeps running from 100
+        tr.instant("after")
+        names = [e["name"] for e in tr.events()]
+        assert names == ["before", "after"]
+        assert tr.events()[1]["ts"] == pytest.approx(100e6)
+
+    def test_clear_drops_events_and_restarts_origin(self, tracer):
+        tr, t = tracer
+        tr.instant("old")
+        t["now"] = 150.0
+        tr.clear()
+        tr.instant("new")
+        (ev,) = tr.events()
+        assert ev["name"] == "new" and ev["ts"] == 0.0
+
+    def test_metrics_registry(self):
+        m = obs_trace.Metrics()
+        m.inc("hits")
+        m.inc("hits", 2)
+        m.gauge("depth", 3.5)
+        assert m.get("hits") == 3 and m.get("depth") == 3.5
+        snap = m.snapshot()
+        assert snap == {"counters": {"hits": 3}, "gauges": {"depth": 3.5}}
+        m.reset()
+        assert m.snapshot() == {"counters": {}, "gauges": {}}
+
+    def test_disabled_span_overhead_is_tiny(self):
+        """The bench's gate, as an inequality: 10 disabled span() calls
+        must cost under 5% of one small netsim replay."""
+        import time
+
+        topo = netsim.single_switch(8)
+        msgs = [[netsim.Message(s, (s + 1) % 8, 4096) for s in range(8)]]
+        t0 = time.perf_counter()
+        netsim.simulate(msgs, topo)
+        t_replay = time.perf_counter() - t0
+        n = 20_000
+        t0 = time.perf_counter()
+        for _ in range(n):
+            obs.span("probe")
+        per_call = (time.perf_counter() - t0) / n
+        assert 10 * per_call < 0.05 * t_replay
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export
+# ---------------------------------------------------------------------------
+
+
+class TestExport:
+    def _events(self):
+        return [
+            {"ph": "X", "name": "a", "cat": "c", "ts": 1.0, "dur": 2.0,
+             "pid": "dev1", "tid": "link0:up"},
+            {"ph": "i", "name": "b", "cat": "c", "ts": 0.5, "pid": "main",
+             "tid": "main", "s": "t"},
+            {"ph": "C", "name": "ctr", "cat": "c", "ts": 3.0, "pid": "dev1",
+             "tid": "counters", "args": {"v": 1.0}},
+        ]
+
+    def test_structure_and_label_mapping(self):
+        doc = obs_export.chrome_trace(self._events())
+        assert set(doc) == {"traceEvents", "displayTimeUnit"}
+        evs = doc["traceEvents"]
+        meta = [e for e in evs if e["ph"] == "M"]
+        body = [e for e in evs if e["ph"] != "M"]
+        # every string label became a dense int + a metadata name record
+        assert all(isinstance(e["pid"], int) for e in body)
+        assert all(isinstance(e["tid"], int) for e in body)
+        pnames = {e["args"]["name"] for e in meta
+                  if e["name"] == "process_name"}
+        tnames = {e["args"]["name"] for e in meta if e["name"] == "thread_name"}
+        assert pnames == {"dev1", "main"}
+        assert {"link0:up", "main", "counters"} <= tnames
+
+    def test_export_is_byte_deterministic(self, tmp_path):
+        evs = self._events()
+        s1 = obs_export.dumps_chrome_trace(evs)
+        s2 = obs_export.dumps_chrome_trace(list(reversed(evs)))
+        # same events, any insertion order of independent lanes — the
+        # canonical sort + sorted keys make the bytes identical
+        assert s1 == s2
+        p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+        obs_export.write_chrome_trace(str(p1), evs)
+        obs_export.write_chrome_trace(str(p2), evs)
+        assert p1.read_bytes() == p2.read_bytes()
+        json.loads(p1.read_text())  # well-formed
+
+    def test_validate_accepts_own_output(self):
+        doc = obs_export.chrome_trace(self._events())
+        assert obs_export.validate_chrome_trace(doc) == []
+
+    def test_validate_catches_schema_violations(self):
+        bad = {"traceEvents": [
+            {"ph": "X", "name": "a", "ts": 0.0, "pid": 0, "tid": 0},  # no dur
+            {"ph": "C", "name": "c", "ts": 0.0, "pid": 0, "tid": 0},  # no args
+            {"ph": "i", "ts": 0.0, "pid": 0, "tid": 0},  # no name
+        ]}
+        errs = obs_export.validate_chrome_trace(bad)
+        assert len(errs) == 3
+
+    def test_validate_catches_nonmonotone_lane(self):
+        bad = {"traceEvents": [
+            {"ph": "i", "name": "a", "ts": 5.0, "pid": 0, "tid": 0, "s": "t"},
+            {"ph": "i", "name": "b", "ts": 1.0, "pid": 0, "tid": 0, "s": "t"},
+        ]}
+        assert obs_export.validate_chrome_trace(bad)
+        ok = {"traceEvents": [
+            {"ph": "i", "name": "a", "ts": 5.0, "pid": 0, "tid": 0, "s": "t"},
+            {"ph": "i", "name": "b", "ts": 1.0, "pid": 0, "tid": 1, "s": "t"},
+        ]}
+        assert obs_export.validate_chrome_trace(ok) == []
+
+
+# ---------------------------------------------------------------------------
+# timeline: trace events + exact attribution
+# ---------------------------------------------------------------------------
+
+
+def _random_rounds(rng, n_dev, n_rounds):
+    out = []
+    for _ in range(n_rounds):
+        rnd = []
+        for s in range(n_dev):
+            if rng.random() < 0.6:
+                d = int(rng.integers(0, n_dev))
+                if d != s:
+                    rnd.append(netsim.Message(s, d, int(rng.integers(64, 8192))))
+        out.append(rnd)
+    return out
+
+
+def _fabrics(n):
+    return [netsim.single_switch(n), netsim.two_tier(n, 4),
+            netsim.fat_tree(n, 4), netsim.ring(n)]
+
+
+class TestAttribution:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    @pytest.mark.parametrize("barriers", [False, True])
+    def test_conservation_exact_every_fabric(self, seed, barriers):
+        """Σ decomposed segments == t_total bit-for-bit, tolerance 0."""
+        rng = np.random.default_rng(seed)
+        rounds = _random_rounds(rng, 8, 4)
+        for topo in _fabrics(8):
+            res = netsim.simulate(rounds, topo, alpha_msg=2e-6,
+                                  barriers=barriers, collect_hops=True)
+            att = obs.attribute_critical_path(res)
+            assert att.conserved, (topo.name, att.residual)
+            assert float(sum(att.total.values())) == pytest.approx(
+                res.t_total, rel=1e-12
+            )
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_conservation_exact_under_outages(self, seed):
+        rng = np.random.default_rng(100 + seed)
+        rounds = _random_rounds(rng, 8, 4)
+        topo = netsim.fat_tree(8, 4)
+        up = int(topo.params["leaf_up"][0][0])
+        res = netsim.simulate(
+            rounds, topo, alpha_msg=2e-6, collect_hops=True,
+            outages=[netsim.LinkOutage(link=up, t_down=0.0, t_up=2e-5)],
+        )
+        att = obs.attribute_critical_path(res)
+        assert att.conserved
+
+    def test_categories_and_aggregates_consistent(self):
+        rng = np.random.default_rng(7)
+        rounds = _random_rounds(rng, 8, 3)
+        topo = netsim.two_tier(8, 4)
+        res = netsim.simulate(rounds, topo, alpha_msg=2e-6, collect_hops=True)
+        att = obs.attribute_critical_path(res)
+        # per-segment split sums to the segment's wall occupation
+        for seg in att.segments:
+            assert float(seg.total) >= 0.0
+            assert float(seg.serialization) >= 0.0
+            assert float(seg.propagation) >= 0.0
+        # by_round and by_kind both re-aggregate to the same totals
+        for cat in obs_timeline.CATEGORIES:
+            assert sum(d[cat] for d in att.by_round.values()) == pytest.approx(
+                att.total[cat], abs=1e-18
+            )
+            assert sum(d[cat] for d in att.by_kind.values()) == pytest.approx(
+                att.total[cat], abs=1e-18
+            )
+        fr = att.kind_fractions()
+        assert sum(fr.values()) == pytest.approx(1.0, rel=1e-9)
+        kind, frac = att.dominant_kind()
+        assert frac == max(fr.values()) and fr[kind] == frac
+
+    def test_missing_records_raise(self):
+        topo = netsim.single_switch(4)
+        res = netsim.simulate([[netsim.Message(0, 1, 512)]], topo)
+        with pytest.raises(ValueError, match="collect_hops"):
+            obs.attribute_critical_path(res)
+
+    def test_empty_schedule_attributes_to_zero(self):
+        topo = netsim.single_switch(4)
+        res = netsim.simulate([[]], topo, collect_hops=True)
+        att = obs.attribute_critical_path(res)
+        assert att.t_total == 0.0 and att.conserved
+        assert att.segments == ()
+
+
+class TestTimeline:
+    def _result(self):
+        rng = np.random.default_rng(3)
+        return netsim.simulate(
+            _random_rounds(rng, 8, 3), netsim.two_tier(8, 4),
+            alpha_msg=2e-6, collect_hops=True,
+        )
+
+    def test_trace_events_deterministic_and_golden(self, tmp_path):
+        res = self._result()
+        e1 = obs_timeline.trace_events(res)
+        e2 = obs_timeline.trace_events(res)
+        assert e1 == e2
+        p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+        obs_timeline.export_simulation_trace(res, str(p1))
+        obs_timeline.export_simulation_trace(res, str(p2))
+        assert p1.read_bytes() == p2.read_bytes()  # golden determinism
+        doc = json.loads(p1.read_text())
+        assert obs_export.validate_chrome_trace(doc) == []
+
+    def test_trace_events_cover_every_transmission(self):
+        res = self._result()
+        evs = obs_timeline.trace_events(res)
+        xs = [e for e in evs if e["ph"] == "X"]
+        assert len(xs) == len(res.transmissions)
+        batch_marks = [e for e in evs if e["ph"] == "i"]
+        assert len(batch_marks) == len(res.batch_windows)
+        # lanes are devices × links; durations are the link occupations
+        tr0 = res.transmissions[0]
+        ev0 = xs[0]
+        assert ev0["pid"] == f"dev{tr0.src}"
+        assert ev0["tid"] == f"link{tr0.link}:{tr0.kind}"
+        assert ev0["dur"] == pytest.approx((tr0.t_end - tr0.t_start) * 1e6)
+
+    def test_emit_simulation_shares_the_clock(self, tracer):
+        tr, t = tracer
+        t["now"] = 100.0 + 2.5  # tracer has been running 2.5 s
+        res = self._result()
+        obs_timeline.emit_simulation(res, tr)
+        evs = tr.events()
+        xs = [e for e in evs if e["ph"] == "X"]
+        assert len(xs) == len(res.transmissions)
+        # sim second 0 anchors at the current wall trace time
+        first = min(e["ts"] for e in xs)
+        assert first >= 2.5e6 - 1e-6
+        summary = [e for e in evs if e["name"] == "netsim.critical_path"]
+        assert len(summary) == 1 and summary[0]["args"]["conserved"]
+
+    def test_simulate_emits_into_enabled_global_tracer(self):
+        obs.enable()
+        obs.clear()
+        rng = np.random.default_rng(5)
+        res = netsim.simulate(
+            _random_rounds(rng, 8, 2), netsim.single_switch(8)
+        )
+        obs.disable()
+        # the tracer being on forced hop collection + emission
+        assert len(res.transmissions) > 0
+        names = {e["name"] for e in obs.events()}
+        assert "netsim.critical_path" in names
+
+
+# ---------------------------------------------------------------------------
+# cross-layer instrumentation
+# ---------------------------------------------------------------------------
+
+
+class TestInstrumentation:
+    def test_planner_spans(self):
+        from repro.core.graph import planted_partition_graph
+        from repro.core.multilevel import multilevel_partition
+        from repro.core.routing import two_level_routing
+        from repro.core.traffic import TrafficMatrix
+
+        graph, _ = planted_partition_graph(
+            64, n_blocks=8, avg_degree=16, p_in_frac=0.9, seed=0
+        )
+        obs.enable()
+        obs.clear()
+        # coarsen_to below the vertex count forces the full V-cycle
+        # (the default would shortcut a 64-vertex graph to greedy)
+        multilevel_partition(graph, 8, coarsen_to=16, seed=0)
+        tm = TrafficMatrix.from_coo(
+            graph.rows(), graph.indices, graph.edge_traffic(), 64
+        ).symmetrized(halve=True)
+        two_level_routing(tm, np.ones(64), 8, seed=0)
+        obs.disable()
+        names = {e["name"] for e in obs.events()}
+        assert {"plan.multilevel.coarsen", "plan.multilevel.init_partition",
+                "plan.multilevel.uncoarsen_refine", "plan.alg2.grouping",
+                "plan.alg2.select_bridges", "plan.alg2.validate"} <= names
+
+    def test_supervisor_recovery_events(self, tmp_path):
+        from repro.train.fault_tolerance import (
+            DeviceFailure,
+            Supervisor,
+            SupervisorConfig,
+        )
+
+        n_steps, fail_at = 4, 2
+        fired = {"done": False}
+
+        def train_step(params, opt_state, batch):
+            if batch["step"] == fail_at and not fired["done"]:
+                fired["done"] = True
+                raise DeviceFailure(3, "injected")
+            return 0.0, params, opt_state, None
+
+        sup = Supervisor(
+            train_step,
+            {"w": np.zeros(2)},
+            {"t": np.zeros(1)},
+            lambda step: {"step": step},
+            SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=1, seed=0),
+            evacuate_hook=lambda devs: True,
+        )
+        obs.enable()
+        obs.clear()
+        before = obs.METRICS.get("supervisor.retries")
+        hist = sup.run(n_steps)
+        obs.disable()
+        assert len(hist) == n_steps
+        assert any(h.retries for h in hist)  # the injected failure retried
+        names = [e["name"] for e in obs.events()]
+        for expected in ("supervisor.failure", "supervisor.rollback",
+                         "supervisor.evacuate", "supervisor.step"):
+            assert expected in names, expected
+        # only committed steps emit a step span — the failed attempt
+        # shows up as the failure instant + recovery ladder instead
+        assert names.count("supervisor.step") == n_steps
+        assert obs.METRICS.get("supervisor.retries") == before + 1
+        failure = next(e for e in obs.events()
+                       if e["name"] == "supervisor.failure")
+        assert failure["args"]["step"] == fail_at
+        assert failure["args"]["devices"] == [3]
+
+    def test_metrics_merge_into_bench_payload(self):
+        snap = obs.metrics_snapshot()
+        assert set(snap) == {"counters", "gauges"}
+        json.dumps(snap)  # must be JSON-serializable as-is
+
+
+# ---------------------------------------------------------------------------
+# SimResult edge cases the obs layer leans on
+# ---------------------------------------------------------------------------
+
+
+class TestSimResultEdgeCases:
+    def test_zero_total_utilization_no_divide(self):
+        topo = netsim.single_switch(4)
+        # local-only delivery: free, t_total == 0
+        res = netsim.simulate([[netsim.Message(1, 1, 64)]], topo)
+        assert res.t_total == 0.0
+        util = res.link_utilization()
+        assert util.shape == (len(topo.links),)
+        assert not util.any()
+        assert res.utilization_by_kind() == {}
+        assert res.worst_device() == 0  # defined, no warning, no crash
+
+    def test_worst_device_down_full_horizon_clamps(self):
+        import dataclasses
+
+        topo = netsim.single_switch(3)
+        res = netsim.simulate(
+            [[netsim.Message(0, 2, 512), netsim.Message(1, 2, 512)]], topo
+        )
+        down = np.zeros(len(topo.links))
+        # device 1's uplink down for the WHOLE horizon (and beyond):
+        # availability clamps at 1% — a 100× score, not a divergence
+        down[topo.params["up"][1]] = res.t_total * 10
+        clamped = dataclasses.replace(res, link_down_s=down)
+        with np.errstate(all="raise"):
+            assert clamped.worst_device() == 1
+
+    def test_cli_validate_and_summarize(self, tmp_path, capsys):
+        from repro.obs.__main__ import main as obs_cli
+
+        rng = np.random.default_rng(3)
+        res = netsim.simulate(
+            _random_rounds(rng, 8, 2), netsim.two_tier(8, 4),
+            collect_hops=True,
+        )
+        path = tmp_path / "t.json"
+        obs_timeline.export_simulation_trace(res, str(path))
+        assert obs_cli(["validate", str(path)]) == 0
+        assert obs_cli(["summarize", str(path)]) == 0
+        out = capsys.readouterr().out
+        assert "events" in out

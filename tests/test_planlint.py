@@ -524,3 +524,56 @@ def test_downed_link_with_spine_backup_silent_pl171():
     findings = run_lints(ctx)
     assert "PL171" not in _ids(findings)
     assert topo.route_avoiding(0, 6, {leaf_up}) is not None
+
+
+# ---------------------------------------------------------------------------
+# PL180: dominant-bottleneck attribution (opt-in netsim replay)
+# ---------------------------------------------------------------------------
+
+
+def test_bottleneck_attribution_fires_pl180(good_table):
+    """A two-tier fabric concentrates an Algorithm-2 forwarding replay
+    on the leaf uplinks — with the opt-in threshold set below that
+    share, PL180 reports the dominant kind and the decomposition."""
+    from repro import netsim
+
+    tb, _, _ = good_table
+    topo = netsim.two_tier(64, 8)
+    ctx = PlanContext.from_table(
+        tb, name="bottleneck", topology=topo, bottleneck_threshold=0.3
+    )
+    findings = [f for f in run_lints(ctx) if f.rule_id == "PL180"]
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.severity == "info"
+    assert "leaf_up" in f.message  # the oversubscribed tier
+    assert "critical path" in f.message
+
+
+def test_bottleneck_attribution_opt_in_pl180(good_table):
+    """Without the threshold the rule is skipped (the replay is a full
+    simulation — too costly for an unasked lint pass), and a threshold
+    above the dominant share stays silent."""
+    from repro import netsim
+
+    tb, _, _ = good_table
+    topo = netsim.two_tier(64, 8)
+    ctx = PlanContext.from_table(tb, name="default", topology=topo)
+    assert "PL180" not in _ids(run_lints(ctx))
+    ctx_hi = PlanContext.from_table(
+        tb, name="high-bar", topology=topo, bottleneck_threshold=0.99
+    )
+    assert "PL180" not in _ids(run_lints(ctx_hi))
+
+
+def test_bottleneck_attribution_needs_topology_pl180(good_table):
+    tb, _, _ = good_table
+    ctx = PlanContext.from_table(
+        tb, name="no-topo", bottleneck_threshold=0.0
+    )
+    assert "PL180" not in _ids(run_lints(ctx))
+
+
+def test_bottleneck_attribution_in_catalog(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    assert "PL180" in capsys.readouterr().out
